@@ -1,0 +1,30 @@
+"""Paper Fig. 3: CIFAR-10 (CNN, ~1e6 params) under the maintained attack.
+Worker counts per paper: Krum/GeoMed 21+18, Brute 6+5, Average 21+0.
+See fig2 module docstring for the fidelity note."""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_experiment
+
+
+def main(steps: int = 50) -> None:
+    ref = run_experiment(kind="cifar", gar="average", attack="none",
+                         n_honest=21, f=0, steps=steps, eta0=0.1,
+                         r_eta=2000)
+    emit("fig3/average_clean", ref["us_per_step"],
+         f"mean_acc={ref['mean_acc']:.3f};final={ref['final_acc']:.3f}")
+
+    linf = (("gamma", "closed"), ("direction", "anti"), ("margin", 0.8))
+    for gar, nh, f in [("krum", 21, 18), ("geomed", 21, 18),
+                       ("brute", 6, 5)]:
+        r = run_experiment(kind="cifar", gar=gar, attack="omniscient_linf",
+                           n_honest=nh, f=f, steps=steps, eta0=0.1,
+                           r_eta=2000,
+                           attack_kwargs=(("gar_name", gar),) + linf)
+        emit(f"fig3/{gar}_linf", r["us_per_step"],
+             f"mean_acc={r['mean_acc']:.3f};final={r['final_acc']:.3f};"
+             f"byz_w={r['mean_byz_weight']:.2f};"
+             f"ref_mean={ref['mean_acc']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Paper Figs. 4/5: Bulyan vs Krum/GeoMed under attack, 30 honest + 9
+Byzantine (n = 39 = 4f+3 minimal Bulyan quorum), at two learning rates.
+
+Expected ordering (paper): Bulyan tracks the clean-average reference;
+Krum/GeoMed lose more convergence speed at the higher rate.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, run_experiment
+
+
+def main(steps: int = 120) -> None:
+    linf = (("gamma", "closed"), ("direction", "anti"), ("margin", 0.8))
+    for eta0 in (0.3, 0.1):
+        ref = run_experiment(kind="mnist", gar="average", attack="none",
+                             n_honest=30, f=0, steps=steps, eta0=eta0)
+        emit(f"fig4/average_clean_eta{eta0}", ref["us_per_step"],
+             f"mean_acc={ref['mean_acc']:.3f};to90={ref['steps_to_90']}")
+        for gar in ("krum", "geomed", "bulyan-krum"):
+            base = gar.replace("bulyan-", "")
+            r = run_experiment(kind="mnist", gar=gar,
+                               attack="omniscient_linf", n_honest=30, f=9,
+                               steps=steps, eta0=eta0,
+                               attack_kwargs=(("gar_name", base),) + linf)
+            emit(f"fig4/{gar}_attacked_eta{eta0}", r["us_per_step"],
+                 f"mean_acc={r['mean_acc']:.3f};to90={r['steps_to_90']};"
+                 f"byz_w={r['mean_byz_weight']:.2f};"
+                 f"ref_mean={ref['mean_acc']:.3f};"
+                 f"ref_to90={ref['steps_to_90']}")
+
+    # fig5-style: lp 'top' variant — single-coordinate sabotage
+    lp = (("gamma", "closed"), ("coord", "top"), ("margin", 0.8))
+    for gar in ("krum", "bulyan-krum"):
+        base = gar.replace("bulyan-", "")
+        r = run_experiment(kind="mnist", gar=gar, attack="omniscient_lp",
+                           n_honest=30, f=9, steps=steps, eta0=0.3,
+                           attack_kwargs=(("gar_name", base),) + lp)
+        emit(f"fig5/{gar}_lp", r["us_per_step"],
+             f"mean_acc={r['mean_acc']:.3f};"
+             f"max_dev={r['max_agg_dev']:.2f};"
+             f"byz_w={r['mean_byz_weight']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

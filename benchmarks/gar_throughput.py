@@ -1,0 +1,58 @@
+"""Proposition 1: aggregation cost.  Measures us/call for every GAR across
+(n, d) and checks the two analytic claims:
+
+  * Krum/GeoMed/Bulyan are O(n^2 d) — cost ~ linear in d at fixed n;
+  * Bulyan(Krum) amortizes distance computation: its cost stays within a
+    small factor of plain Krum (paper: same O(n^2 d) up to constants),
+    NOT theta times Krum.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.core import get_gar
+
+
+def _time(fn, *args, reps: int = 5) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return 1e6 * (time.time() - t0) / reps
+
+
+def main(ds=(10_000, 100_000, 1_000_000), ns=(15, 39)) -> None:
+    key = jax.random.PRNGKey(0)
+    results = {}
+    for n in ns:
+        f = (n - 3) // 4
+        for d in ds:
+            g = jax.random.normal(key, (n, d))
+            for name in ("average", "cwmed", "trimmed_mean", "krum",
+                         "geomed", "multikrum", "bulyan-krum",
+                         "centered_clip"):
+                gar = get_gar(name)
+                jitted = jax.jit(lambda x, gar=gar: gar(x, f).gradient)
+                us = _time(jitted, g)
+                results[(name, n, d)] = us
+                emit(f"gar_throughput/{name}_n{n}_d{d}", us,
+                     f"bytes={4 * n * d}")
+    # derived checks
+    for n in ns:
+        k = results[("krum", n, ds[-1])]
+        b = results[("bulyan-krum", n, ds[-1])]
+        emit(f"gar_throughput/bulyan_over_krum_n{n}", 0,
+             f"ratio={b / k:.2f};amortized<<theta={n - 2 * ((n - 3) // 4)}")
+        lin = results[("krum", n, ds[-1])] / results[("krum", n, ds[0])]
+        emit(f"gar_throughput/krum_d_scaling_n{n}", 0,
+             f"t(d*100)/t(d)={lin:.1f};expected~100(O(n^2 d))")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Scaling validation of the paper's two analytic results.
+
+1. §3.2 / §B: the attacker's selected margin gamma_m grows like
+   Omega(sqrt(d)) for Krum/GeoMed (p = 2).  We measure gamma_m by the exact
+   growth+bisection search at several d and fit the log-log slope —
+   expected ~ 0.5.
+
+2. Proposition 2: Bulyan's per-coordinate deviation from the honest mean
+   under the *same* attack stays O(sigma_coord) = O(sigma / sqrt(d)) of
+   the full-gradient sigma — i.e. flat in d on a per-coordinate scale
+   while Krum's grows like sqrt(d): the ratio Krum/Bulyan grows ~ sqrt(d).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import (find_gamma_max, get_attack, get_gar,
+                        make_selection_checker)
+
+
+def main(dims=(64, 256, 1024, 4096), n_h: int = 12, f: int = 3) -> None:
+    key = jax.random.PRNGKey(11)
+    gammas = {"krum": [], "geomed": []}
+    ratios = []
+    for d in dims:
+        honest = jax.random.normal(jax.random.fold_in(key, d),
+                                   (n_h, d)) * 0.5 + 1.0
+        e = jnp.zeros((d,)).at[0].set(1.0)
+        t0 = time.time()
+        for rule in ("krum", "geomed"):
+            check = make_selection_checker(rule, f)
+            g = float(find_gamma_max(honest, f, e, check))
+            gammas[rule].append(g)
+        # attack tuned against krum; measure aggregate deviation
+        byz = get_attack("omniscient_lp")(honest, f, None, gar_name="krum",
+                                          margin=0.95)
+        full = jnp.concatenate([honest, byz])
+        mean = jnp.mean(honest, axis=0)
+        kdev = float(jnp.max(jnp.abs(
+            get_gar("krum")(full, f).gradient - mean)))
+        bdev = float(jnp.max(jnp.abs(
+            get_gar("bulyan-krum")(full, f).gradient - mean)))
+        ratios.append(kdev / max(bdev, 1e-9))
+        us = 1e6 * (time.time() - t0)
+        emit(f"leeway/d{d}", us,
+             f"gamma_krum={gammas['krum'][-1]:.2f};"
+             f"gamma_geomed={gammas['geomed'][-1]:.2f};"
+             f"krum_dev={kdev:.2f};bulyan_dev={bdev:.3f};"
+             f"ratio={ratios[-1]:.1f}")
+
+    ld = np.log(np.asarray(dims, float))
+    for rule in ("krum", "geomed"):
+        slope = np.polyfit(ld, np.log(np.asarray(gammas[rule])), 1)[0]
+        emit(f"leeway/slope_{rule}", 0,
+             f"loglog_slope={slope:.3f};expected~0.5")
+    rslope = np.polyfit(ld, np.log(np.asarray(ratios)), 1)[0]
+    emit("leeway/slope_krum_over_bulyan", 0,
+         f"loglog_slope={rslope:.3f};expected~0.5(Prop2)")
+
+
+if __name__ == "__main__":
+    main()

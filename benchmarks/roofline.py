@@ -1,0 +1,51 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.sweep) and emits
+one row per (arch x shape x mesh): the three terms, the dominant one, and
+the MODEL_FLOPS / HLO_FLOPS utilization ratio.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def rows(art_dir: str = ART):
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rec = json.load(open(path))
+        out.append(rec)
+    return out
+
+
+def main(art_dir: str = ART) -> None:
+    n_ok = n_skip = n_err = 0
+    for rec in rows(art_dir):
+        tag = f"{rec.get('arch')}.{rec.get('shape')}" + (
+            ".pod2" if rec.get("multi_pod") else ".pod1")
+        if rec.get("skipped"):
+            n_skip += 1
+            emit(f"roofline/{tag}", 0, "skipped(n/a)")
+            continue
+        if "error" in rec:
+            n_err += 1
+            emit(f"roofline/{tag}", 0, "ERROR")
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        step_time = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        emit(f"roofline/{tag}", 1e6 * step_time,
+             f"compute={r['compute_s']:.4f}s;memory={r['memory_s']:.4f}s;"
+             f"collective={r['collective_s']:.4f}s;"
+             f"dominant={r['dominant'].replace('_s','')};"
+             f"useful_ratio={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)}")
+    emit("roofline/summary", 0, f"ok={n_ok};skipped={n_skip};errors={n_err}")
+
+
+if __name__ == "__main__":
+    main()

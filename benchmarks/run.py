@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure plus the systems
+benches.  Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="longer training runs (closer to the paper's "
+                         "epoch counts)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig2_mnist_attack, fig3_cifar_attack,
+                            fig45_bulyan_defense, fig6_bulyan_cost,
+                            gar_throughput, leeway_scaling, roofline)
+
+    steps2 = 400 if args.full else 120
+    steps3 = 200 if args.full else 50
+    steps45 = 400 if args.full else 120
+    steps6 = 150 if args.full else 60
+
+    benches = [
+        ("leeway", lambda: leeway_scaling.main()),
+        ("gar_throughput", lambda: gar_throughput.main()),
+        ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
+        ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),
+        ("fig45", lambda: fig45_bulyan_defense.main(steps=steps45)),
+        ("fig6", lambda: fig6_bulyan_cost.main(steps=steps6)),
+        ("roofline", lambda: roofline.main()),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception as e:  # keep the harness going
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"{name}/total,{1e6 * (time.time() - t0):.0f},done",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

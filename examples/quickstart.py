@@ -1,0 +1,37 @@
+"""Quickstart: Byzantine-robust aggregation in 40 lines.
+
+Runs one aggregation round on synthetic worker gradients, showing the
+paper's headline result: the omniscient one-coordinate attack fully
+poisons Krum, while Bulyan(Krum) stays at honest-noise level.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_attack, get_gar
+
+n_honest, f, d = 12, 3, 10_000
+key = jax.random.PRNGKey(0)
+
+# honest workers: i.i.d. noisy estimates of the true gradient (= ones)
+honest = jnp.ones((n_honest, d)) + 0.5 * jax.random.normal(key,
+                                                           (n_honest, d))
+
+# the omniscient adversary (§3.2): mean of honest + gamma on one
+# coordinate, with gamma maximized subject to still being selected by Krum
+byz = get_attack("omniscient_lp")(honest, f, None, gar_name="krum")
+submissions = jnp.concatenate([honest, byz])
+
+print(f"{'rule':<14} {'max |agg - honest_mean|':>24}   selected byz?")
+mean = jnp.mean(honest, axis=0)
+for rule in ("average", "krum", "geomed", "cwmed", "trimmed_mean",
+             "bulyan-krum"):
+    res = get_gar(rule)(submissions, f)
+    dev = float(jnp.max(jnp.abs(res.gradient - mean)))
+    picked = float(res.selected[-f:].sum()) > 0
+    print(f"{rule:<14} {dev:>24.3f}   {picked}")
+
+print("\nKrum is dragged by gamma_m = Theta(sqrt(d) * sigma) on the "
+      "attacked coordinate;\nBulyan clamps the drag to O(sigma) "
+      "(Proposition 2).")

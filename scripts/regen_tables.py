@@ -1,0 +1,19 @@
+"""Append generated dry-run + roofline tables to EXPERIMENTS.md."""
+import subprocess, sys, os
+os.chdir(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+env = dict(os.environ); env["PYTHONPATH"] = "src"
+def gen(dirpath, mode):
+    return subprocess.run([sys.executable, "-m", "repro.launch.summarize",
+                           "--dir", dirpath, "--mode", mode],
+                          capture_output=True, text=True, env=env).stdout
+md = open("EXPERIMENTS.md").read()
+marker = "## Generated tables"
+md = md[:md.index(marker) + len(marker)]
+md += "\n\n### Roofline — naive baseline (single-pod 16x16, rolled-scan convention)\n\n"
+md += gen("artifacts/dryrun", "roofline").split("\n", 2)[2]
+md += "\n\n### Roofline — optimized (scatter MoE + Megatron rules + attn batch-shard)\n\n"
+md += gen("artifacts/dryrun_opt", "roofline").split("\n", 2)[2]
+md += "\n\n### Dry-run detail — optimized, both meshes\n\n"
+md += gen("artifacts/dryrun_opt", "dryrun").split("\n", 2)[2]
+open("EXPERIMENTS.md", "w").write(md)
+print("tables regenerated")

@@ -1,0 +1,264 @@
+"""Gradient aggregation rules (GARs) from the Bulyan paper plus standard
+baselines.
+
+Implemented (paper §2.3): ``average``, ``krum``, ``geomed`` (the Medoid),
+``brute``.  Extras beyond the paper, used as additional baselines in the
+benchmarks: ``multikrum``, ``cwmed`` (coordinate-wise median),
+``trimmed_mean``, ``centered_clip``.
+
+All rules are pure-jnp, jit-compatible, and take ``(grads: (n, d), f)`` with
+static ``n``/``f``.  Selection-style rules also expose a ``*_select`` helper
+returning the chosen index given a pairwise squared-distance matrix and a
+validity mask — these helpers are what Bulyan's recursive phase consumes
+(see ``repro.core.bulyan``) and what the distributed runtime reuses on
+all-reduced partial distance matrices (see ``repro.dist.robust``).
+"""
+from __future__ import annotations
+
+import itertools
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import AggResult, GarSpec
+
+_INF = jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# distance plumbing
+# ---------------------------------------------------------------------------
+
+def pairwise_sq_dists(grads: jnp.ndarray) -> jnp.ndarray:
+    """(n, d) -> (n, n) matrix of squared euclidean distances.
+
+    Uses the Gram-matrix decomposition ``|x|^2 + |y|^2 - 2<x,y>`` so the bulk
+    of the work is a single MXU-friendly matmul.  The Pallas kernel in
+    ``repro.kernels.pairwise_gram`` implements the same contraction with
+    explicit d-tiling; this jnp version is its oracle.
+    """
+    sq = jnp.sum(grads * grads, axis=-1)
+    gram = grads @ grads.T
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    d2 = jnp.maximum(d2, 0.0)  # numerical floor
+    return d2 * (1.0 - jnp.eye(grads.shape[0], dtype=grads.dtype))
+
+
+def _masked(dist2: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Set rows/cols of excluded workers (mask == False) to +inf, and the
+    diagonal to +inf so "self" never counts as a neighbour."""
+    n = dist2.shape[0]
+    valid = mask[:, None] & mask[None, :]
+    off_diag = ~jnp.eye(n, dtype=bool)
+    return jnp.where(valid & off_diag, dist2, _INF)
+
+
+# ---------------------------------------------------------------------------
+# selection helpers (used standalone and inside Bulyan's recursion)
+# ---------------------------------------------------------------------------
+
+def krum_scores(dist2: jnp.ndarray, mask: jnp.ndarray, f: int,
+                n_remaining: int) -> jnp.ndarray:
+    """Krum score: sum of squared distances to the ``n_remaining - f - 2``
+    closest *remaining* vectors.  ``n_remaining`` must be static."""
+    k = n_remaining - f - 2
+    if k < 1:
+        raise ValueError(
+            f"krum needs n >= f + 3 per use (n={n_remaining}, f={f})")
+    dm = _masked(dist2, mask)
+    # ascending sort puts the masked +inf entries last
+    snn = jnp.sort(dm, axis=1)[:, :k]
+    scores = jnp.sum(snn, axis=1)
+    return jnp.where(mask, scores, _INF)
+
+
+def krum_select(dist2: jnp.ndarray, mask: jnp.ndarray, f: int,
+                n_remaining: int) -> jnp.ndarray:
+    return jnp.argmin(krum_scores(dist2, mask, f, n_remaining))
+
+
+def geomed_scores(dist2: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Medoid score: sum of (non-squared) distances to remaining vectors."""
+    dm = _masked(dist2, mask)
+    dist = jnp.sqrt(jnp.where(jnp.isinf(dm), 0.0, dm))
+    scores = jnp.sum(dist, axis=1)
+    return jnp.where(mask, scores, _INF)
+
+
+def geomed_select(dist2: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    # argmin returns the smallest index among ties — matching the paper's
+    # "Medoid ... with the smallest index".
+    return jnp.argmin(geomed_scores(dist2, mask))
+
+
+def _subsets(n: int, size: int):
+    return list(itertools.combinations(range(n), size))
+
+
+def brute_subset_diameters(dist2: jnp.ndarray, n: int, f: int) -> jnp.ndarray:
+    """Diameter (max pairwise squared distance) of every (n-f)-subset.
+
+    Enumerated at trace time — Brute is only practical for small n
+    (paper §2.3.1), and we use it exactly as the paper does: as a small-n
+    benchmark.
+    """
+    subsets = _subsets(n, n - f)
+    idx = jnp.asarray(subsets)  # (S, n-f)
+    sub = dist2[idx[:, :, None], idx[:, None, :]]  # (S, n-f, n-f)
+    return jnp.max(sub.reshape(len(subsets), -1), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# the GARs themselves
+# ---------------------------------------------------------------------------
+
+def average(grads: jnp.ndarray, f: int = 0) -> AggResult:
+    """Arithmetic mean — the non-robust reference (paper Fig. 2/3)."""
+    n = grads.shape[0]
+    w = jnp.full((n,), 1.0 / n, dtype=grads.dtype)
+    return AggResult(jnp.mean(grads, axis=0), w, jnp.zeros((n,), grads.dtype))
+
+
+def krum(grads: jnp.ndarray, f: int) -> AggResult:
+    """Krum (Blanchard et al., 2017): output the vector with the smallest
+    sum of squared distances to its n - f - 2 nearest neighbours."""
+    n = grads.shape[0]
+    if n < 2 * f + 3:
+        raise ValueError(f"krum requires n >= 2f+3, got n={n}, f={f}")
+    dist2 = pairwise_sq_dists(grads)
+    mask = jnp.ones((n,), dtype=bool)
+    scores = krum_scores(dist2, mask, f, n)
+    i = jnp.argmin(scores)
+    sel = jax.nn.one_hot(i, n, dtype=grads.dtype)
+    return AggResult(grads[i], sel, scores)
+
+
+def multikrum(grads: jnp.ndarray, f: int, m: Optional[int] = None) -> AggResult:
+    """Multi-Krum: average of the m best-scored vectors (m = n - f - 2 by
+    default).  Beyond-paper baseline (from the Krum paper)."""
+    n = grads.shape[0]
+    if m is None:
+        m = max(1, n - f - 2)
+    dist2 = pairwise_sq_dists(grads)
+    scores = krum_scores(dist2, jnp.ones((n,), bool), f, n)
+    _, top = jax.lax.top_k(-scores, m)
+    sel = jnp.zeros((n,), grads.dtype)
+    sel = sel.at[top].set(1.0 / m)
+    return AggResult(sel @ grads, sel, scores)
+
+
+def geomed(grads: jnp.ndarray, f: int = 0) -> AggResult:
+    """GeoMed — the Medoid with the smallest index (paper §2.3.3)."""
+    n = grads.shape[0]
+    dist2 = pairwise_sq_dists(grads)
+    scores = geomed_scores(dist2, jnp.ones((n,), bool))
+    i = jnp.argmin(scores)
+    sel = jax.nn.one_hot(i, n, dtype=grads.dtype)
+    return AggResult(grads[i], sel, scores)
+
+
+def brute(grads: jnp.ndarray, f: int) -> AggResult:
+    """Brute (paper §2.3.1): average of the most clumped (n-f)-subset,
+    i.e. the subset minimizing its max pairwise distance."""
+    n = grads.shape[0]
+    if n < 2 * f + 1:
+        raise ValueError(f"brute requires n >= 2f+1, got n={n}, f={f}")
+    dist2 = pairwise_sq_dists(grads)
+    diam = brute_subset_diameters(dist2, n, f)
+    best = jnp.argmin(diam)
+    idx = jnp.asarray(_subsets(n, n - f))  # (S, n-f)
+    chosen = idx[best]  # (n-f,)
+    sel = jnp.zeros((n,), grads.dtype).at[chosen].set(1.0 / (n - f))
+    agg = sel @ grads
+    # per-worker score: diameter of the best subset containing the worker
+    member = jnp.zeros((len(idx), n), bool).at[
+        jnp.arange(len(idx))[:, None], idx].set(True)
+    scores = jnp.min(jnp.where(member, diam[:, None], _INF), axis=0)
+    return AggResult(agg, sel, scores)
+
+
+def cwmed(grads: jnp.ndarray, f: int = 0) -> AggResult:
+    """Coordinate-wise median (Yin et al., 2018) — beyond-paper baseline."""
+    n = grads.shape[0]
+    agg = jnp.median(grads, axis=0)
+    return AggResult(agg, jnp.full((n,), 1.0 / n, grads.dtype),
+                     jnp.zeros((n,), grads.dtype))
+
+
+def trimmed_mean(grads: jnp.ndarray, f: int) -> AggResult:
+    """Coordinate-wise f-trimmed mean (Yin et al., 2018) — beyond-paper."""
+    n = grads.shape[0]
+    if n <= 2 * f:
+        raise ValueError(f"trimmed_mean requires n > 2f, got n={n}, f={f}")
+    s = jnp.sort(grads, axis=0)
+    agg = jnp.mean(s[f:n - f], axis=0)
+    return AggResult(agg, jnp.full((n,), 1.0 / n, grads.dtype),
+                     jnp.zeros((n,), grads.dtype))
+
+
+def centered_clip(grads: jnp.ndarray, f: int, tau: float = 10.0,
+                  iters: int = 3) -> AggResult:
+    """Centered clipping (Karimireddy et al., 2021) — beyond-paper baseline.
+
+    Iteratively clips worker deviations from a running center to radius tau.
+    """
+    n = grads.shape[0]
+    v = jnp.mean(grads, axis=0)
+
+    def body(_, v):
+        delta = grads - v[None, :]
+        norm = jnp.linalg.norm(delta, axis=1, keepdims=True)
+        scale = jnp.minimum(1.0, tau / jnp.maximum(norm, 1e-12))
+        return v + jnp.mean(delta * scale, axis=0)
+
+    v = jax.lax.fori_loop(0, iters, body, v)
+    return AggResult(v, jnp.full((n,), 1.0 / n, grads.dtype),
+                     jnp.zeros((n,), grads.dtype))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+REGISTRY = {
+    "average": GarSpec("average", average, lambda f: 1, False,
+                       "arithmetic mean (not Byzantine-resilient)"),
+    "krum": GarSpec("krum", krum, lambda f: 2 * f + 3, True,
+                    "Blanchard et al. 2017"),
+    "multikrum": GarSpec("multikrum", multikrum, lambda f: 2 * f + 3, True,
+                         "average of m best Krum scores"),
+    "geomed": GarSpec("geomed", geomed, lambda f: 2 * f + 1, True,
+                      "medoid with smallest index"),
+    "brute": GarSpec("brute", brute, lambda f: 2 * f + 1, True,
+                     "min-diameter subset average (small n only)"),
+    "cwmed": GarSpec("cwmed", cwmed, lambda f: 2 * f + 1, True,
+                     "coordinate-wise median"),
+    "trimmed_mean": GarSpec("trimmed_mean", trimmed_mean,
+                            lambda f: 2 * f + 1, True,
+                            "coordinate-wise trimmed mean"),
+    "centered_clip": GarSpec("centered_clip", centered_clip,
+                             lambda f: 2 * f + 1, True,
+                             "iterative centered clipping"),
+}
+
+
+def get_gar(name: str):
+    """Resolve a GAR by name.  ``bulyan-<base>`` builds Bulyan(base)."""
+    if name.startswith("bulyan"):
+        from repro.core.bulyan import make_bulyan  # circular-safe
+        base = name.split("-", 1)[1] if "-" in name else "krum"
+        return make_bulyan(base)
+    if name not in REGISTRY:
+        raise KeyError(f"unknown GAR {name!r}; have {sorted(REGISTRY)} "
+                       f"plus 'bulyan-<base>'")
+    return REGISTRY[name].fn
+
+
+def quorum(name: str, f: int) -> int:
+    """Minimal n for a rule at a given f."""
+    if name.startswith("bulyan"):
+        return 4 * f + 3
+    return REGISTRY[name].min_n(f)

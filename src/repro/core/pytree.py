@@ -1,0 +1,49 @@
+"""Pytree <-> flat-matrix adapters for the GAR core.
+
+The core GARs operate on ``(n, d)`` matrices.  Training code holds per-worker
+gradients as a pytree whose leaves carry a leading worker axis
+``(n, *param_shape)``.  These helpers flatten/unflatten without copying more
+than once, and ``aggregate_pytree`` applies any registered GAR to such a
+stacked-gradient pytree.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gars
+from repro.core.types import AggResult
+
+
+def stack_flatten(stacked_tree: Any) -> Tuple[jnp.ndarray, Any]:
+    """Pytree of (n, *shape) leaves -> ((n, d) matrix, unravel context)."""
+    leaves, treedef = jax.tree_util.tree_flatten(stacked_tree)
+    n = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [leaf.reshape(n, -1).astype(jnp.float32) for leaf in leaves], axis=1)
+    shapes = [(leaf.shape[1:], leaf.dtype) for leaf in leaves]
+    return flat, (treedef, shapes)
+
+
+def unflatten(vec: jnp.ndarray, ctx: Any) -> Any:
+    """(d,) vector -> pytree of per-parameter leaves."""
+    treedef, shapes = ctx
+    leaves, off = [], 0
+    for shape, dtype in shapes:
+        size = 1
+        for s in shape:
+            size *= s
+        leaves.append(vec[off:off + size].reshape(shape).astype(dtype))
+        off += size
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def aggregate_pytree(stacked_tree: Any, gar_name: str, f: int) -> Tuple[Any, AggResult]:
+    """Apply GAR ``gar_name`` across the leading worker axis of a stacked
+    gradient pytree.  Returns (aggregated pytree, AggResult diagnostics)."""
+    gar = gars.get_gar(gar_name)
+    flat, ctx = stack_flatten(stacked_tree)
+    res = gar(flat, f)
+    return unflatten(res.gradient, ctx), res

@@ -1,0 +1,61 @@
+"""Common types for the Byzantine-robust aggregation core.
+
+Every gradient aggregation rule (GAR) in this package operates on a stacked
+gradient matrix ``grads`` of shape ``(n, d)`` — one row per worker — plus a
+*static* Byzantine bound ``f``.  The pytree-aware wrappers live in
+``repro.core.pytree`` and the mesh-sharded implementations in ``repro.dist``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax.numpy as jnp
+
+
+class AggResult(NamedTuple):
+    """Result of one aggregation.
+
+    gradient:  (d,) the aggregated gradient.
+    selected:  (n,) float mask — 1.0 where the worker's submission took part
+               in the final linear combination (selection-based rules), or
+               fractional weights (e.g. averaging).  Purely diagnostic.
+    scores:    (n,) per-worker score used by the rule (lower = better), or
+               zeros when the rule is score-free.
+    """
+
+    gradient: jnp.ndarray
+    selected: jnp.ndarray
+    scores: jnp.ndarray
+
+
+# A GAR is a callable (grads: (n, d), f: int) -> AggResult.  ``f`` must be a
+# static Python int (it controls top-k sizes and unrolled loops).
+GarFn = Callable[..., AggResult]
+
+
+@dataclasses.dataclass(frozen=True)
+class GarSpec:
+    """Registry entry for a gradient aggregation rule."""
+
+    name: str
+    fn: GarFn
+    #: minimal worker count as a function of f (paper §2.3 / §4)
+    min_n: Callable[[int], int]
+    #: True when the rule is proven (alpha, f)-Byzantine-resilient
+    byzantine_resilient: bool
+    doc: str = ""
+
+    def check_quorum(self, n: int, f: int) -> None:
+        need = self.min_n(f)
+        if n < need:
+            raise ValueError(
+                f"GAR {self.name!r} requires n >= {need} for f={f}, got n={n}"
+            )
+
+
+class AttackResult(NamedTuple):
+    """Byzantine submissions plus diagnostics."""
+
+    byzantine: jnp.ndarray  # (f, d)
+    info: Dict[str, Any]

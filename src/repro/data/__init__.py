@@ -1,0 +1,4 @@
+from repro.data.synthetic import (ByzantineBatcher, cifar_like, lm_batches,
+                                  mnist_like)
+
+__all__ = ["ByzantineBatcher", "cifar_like", "lm_batches", "mnist_like"]

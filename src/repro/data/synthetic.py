@@ -1,0 +1,123 @@
+"""Deterministic synthetic data pipelines.
+
+The container is offline, so the paper's MNIST/CIFAR-10 are replaced by
+*look-alike* tasks with identical shapes and class counts: gaussian
+mixtures with fixed per-class means (learnable by the paper's exact models,
+separable enough that the accuracy dynamics in Figs. 2-6 reproduce
+qualitatively).  The LM stream is a sharp-transition Markov chain — a task
+a transformer reduces loss on within a few hundred steps.
+
+Everything is a pure function of (seed, step): workers/hosts can generate
+their shards independently and reproducibly (no data files, no I/O).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# classification look-alikes (paper's tasks)
+# ---------------------------------------------------------------------------
+
+def _class_means(dim: int, n_classes: int, seed: int) -> np.ndarray:
+    """Sparse [0, 1] per-class prototypes, MNIST-like magnitudes: each class
+    lights up ~15% of the pixels (norm ~ 10, like a real digit)."""
+    rng = np.random.default_rng(seed)
+    proto = rng.uniform(0.5, 1.0, (n_classes, dim))
+    mask = rng.random((n_classes, dim)) < 0.15
+    return (proto * mask).astype(np.float32)
+
+
+def mnist_like(batch: int, step: int, *, seed: int = 0, noise: float = 0.2,
+               task_seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """(B, 784) float32 in [0, 1], labels (B,) int32, 10 classes.
+
+    ``task_seed`` fixes the class prototypes (the task itself); ``seed``
+    only affects sampling, so train/eval streams with different seeds
+    still share one task."""
+    means = _class_means(784, 10, task_seed)
+    rng = np.random.default_rng((seed, step, 1))
+    labels = rng.integers(0, 10, size=batch)
+    x = means[labels] + noise * rng.standard_normal((batch, 784))
+    return np.clip(x, 0.0, 1.0).astype(np.float32), labels.astype(np.int32)
+
+
+def cifar_like(batch: int, step: int, *, seed: int = 0, noise: float = 0.25,
+               task_seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """(B, 32, 32, 3) float32 in [0, 1], labels (B,) int32, 10 classes."""
+    means = _class_means(32 * 32 * 3, 10, task_seed + 7)
+    rng = np.random.default_rng((seed, step, 2))
+    labels = rng.integers(0, 10, size=batch)
+    x = means[labels] + noise * rng.standard_normal((batch, 32 * 32 * 3))
+    return (np.clip(x, 0.0, 1.0).reshape(batch, 32, 32, 3).astype(np.float32),
+            labels.astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# LM stream
+# ---------------------------------------------------------------------------
+
+def _transition_table(vocab: int, seed: int, branch: int = 4) -> np.ndarray:
+    """Each token has ``branch`` likely successors: (vocab, branch) int32."""
+    rng = np.random.default_rng(seed + 13)
+    return rng.integers(0, vocab, size=(vocab, branch)).astype(np.int32)
+
+
+def lm_batches(vocab: int, batch: int, seq: int, step: int, *,
+               seed: int = 0, branch: int = 4, noise_p: float = 0.05
+               ) -> Tuple[np.ndarray, np.ndarray]:
+    """Markov-chain token stream -> (tokens (B, S), labels (B, S)) where
+    labels are next tokens.  Entropy ~= log(branch) + noise, so a model
+    that learns the table reaches loss ~ log(branch)."""
+    table = _transition_table(vocab, seed, branch)
+    rng = np.random.default_rng((seed, step, 3))
+    toks = np.empty((batch, seq + 1), np.int64)
+    toks[:, 0] = rng.integers(0, vocab, size=batch)
+    choices = rng.integers(0, branch, size=(batch, seq))
+    noise = rng.random((batch, seq)) < noise_p
+    rand_tok = rng.integers(0, vocab, size=(batch, seq))
+    for t in range(seq):
+        nxt = table[toks[:, t], choices[:, t]]
+        toks[:, t + 1] = np.where(noise[:, t], rand_tok[:, t], nxt)
+    return (toks[:, :-1].astype(np.int32), toks[:, 1:].astype(np.int32))
+
+
+# ---------------------------------------------------------------------------
+# worker-sharded batcher for Byzantine training
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ByzantineBatcher:
+    """Yields per-honest-worker mini-batches: honest workers draw i.i.d.
+    samples (paper §2.1); Byzantine workers need no data (the adversary
+    fabricates gradients)."""
+
+    kind: str                    # mnist | cifar | lm
+    n_honest: int
+    per_worker: int
+    seq: int = 0
+    vocab: int = 0
+    seed: int = 0
+    noise: float = 0.2           # class-overlap knob for mnist/cifar
+
+    def batch(self, step: int):
+        xs, ys = [], []
+        for w in range(self.n_honest):
+            s = step * self.n_honest + w
+            if self.kind == "mnist":
+                x, y = mnist_like(self.per_worker, s, seed=self.seed,
+                                  noise=self.noise)
+            elif self.kind == "cifar":
+                x, y = cifar_like(self.per_worker, s, seed=self.seed,
+                                  noise=self.noise)
+            elif self.kind == "lm":
+                x, y = lm_batches(self.vocab, self.per_worker, self.seq, s,
+                                  seed=self.seed)
+            else:
+                raise KeyError(self.kind)
+            xs.append(x)
+            ys.append(y)
+        return np.stack(xs), np.stack(ys)

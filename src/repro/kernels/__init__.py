@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the aggregation hot spots.
+
+  pairwise_gram  — (n, n) squared-distance matrix via d-tiled MXU Gram
+                   accumulation (feeds Krum/GeoMed/Brute/Bulyan selection).
+  bulyan_select  — fused coordinate-wise median + beta-closest-average
+                   (Bulyan phase 2) with an unrolled odd-even sorting
+                   network and windowed prefix sums (VPU, gather-free).
+
+``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles used by the
+shape/dtype-sweep tests.
+"""
+from repro.kernels.bulyan_select import bulyan_select
+from repro.kernels.coord_stats import coord_stats
+from repro.kernels.pairwise_gram import pairwise_gram
+from repro.kernels import ops, ref
+
+__all__ = ["bulyan_select", "coord_stats", "pairwise_gram", "ops", "ref"]

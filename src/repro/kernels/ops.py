@@ -1,0 +1,43 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``use_pallas`` toggles between the kernel (interpret-mode on CPU, compiled
+on TPU) and the pure-jnp oracle.  The GAR core calls these through
+``repro.kernels.ops`` so a single flag flips the whole framework.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.bulyan_select import bulyan_select as _bulyan_select
+from repro.kernels.pairwise_gram import pairwise_gram as _pairwise_gram
+
+# Pallas interpret mode is pure-Python per grid step — correct everywhere,
+# fast only on TPU.  Default to the oracle on CPU, the kernel on TPU.
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+def pairwise_distances(grads: jnp.ndarray, *, use_pallas: bool = None,
+                       block_d: int = 4096) -> jnp.ndarray:
+    """(n, d) -> (n, n) squared distances; kernel or oracle."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if use_pallas:
+        return _pairwise_gram(grads, block_d=block_d, interpret=not _ON_TPU)
+    return ref.pairwise_gram_ref(grads)
+
+
+def bulyan_coordinate(selected: jnp.ndarray, f: int, *,
+                      use_pallas: bool = None,
+                      block_d: int = 2048) -> jnp.ndarray:
+    """(theta, d) -> (d,) Bulyan coordinate phase; kernel or oracle."""
+    if use_pallas is None:
+        use_pallas = _ON_TPU
+    if use_pallas:
+        return _bulyan_select(selected, f, block_d=block_d,
+                              interpret=not _ON_TPU)
+    from repro.core.bulyan import coordinate_phase
+    return coordinate_phase(selected, f)

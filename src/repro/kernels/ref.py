@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the semantic ground truth: straightforward, allocation-heavy
+implementations with no tiling.  Kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_gram_ref(grads: jnp.ndarray) -> jnp.ndarray:
+    """(n, d) -> (n, n) squared euclidean distances, fp32 accumulation."""
+    g = grads.astype(jnp.float32)
+    sq = jnp.sum(g * g, axis=-1)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * (g @ g.T)
+    d2 = jnp.maximum(d2, 0.0)
+    return d2 * (1.0 - jnp.eye(g.shape[0], dtype=jnp.float32))
+
+
+def bulyan_select_ref(selected: jnp.ndarray, f: int) -> jnp.ndarray:
+    """(theta, d) -> (d,): per-coordinate average of the beta = theta - 2f
+    values closest to the coordinate-wise (lower-middle) median.  Literal
+    transcription of the paper's formula."""
+    theta = selected.shape[0]
+    beta = theta - 2 * f
+    assert beta >= 1, (theta, f)
+    x = selected.astype(jnp.float32)
+    s = jnp.sort(x, axis=0)
+    med = s[(theta - 1) // 2]
+    dist = jnp.abs(x - med[None, :])
+    order = jnp.argsort(dist, axis=0)[:beta]
+    closest = jnp.take_along_axis(x, order, axis=0)
+    return jnp.mean(closest, axis=0)
+
+
+def coord_stats_ref(grads: jnp.ndarray, f: int):
+    """(n, d) -> (median, f-trimmed mean), fp32."""
+    x = jnp.sort(grads.astype(jnp.float32), axis=0)
+    n = x.shape[0]
+    med = jnp.median(x, axis=0)
+    trim = jnp.mean(x[f:n - f], axis=0)
+    return med, trim

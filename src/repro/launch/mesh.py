@@ -1,0 +1,8 @@
+"""Production mesh entry point (assignment-specified location).
+
+``make_production_mesh`` is a function — importing this module never
+touches jax device state.
+"""
+from repro.dist.mesh import make_host_mesh, make_production_mesh, mesh_axis_sizes
+
+__all__ = ["make_host_mesh", "make_production_mesh", "mesh_axis_sizes"]

@@ -1,0 +1,107 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x input shape).
+
+Nothing here allocates device memory: parameters, optimizer state, and
+caches come from ``jax.eval_shape``; inputs are hand-built structs.  The
+dry-run lowers against these, exactly like shannon/kernels-style dry-runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config, get_reduced
+from repro.dist.mesh import mesh_axis_sizes
+from repro.dist.sharding import (batch_pspec, cache_shardings,
+                                 param_shardings)
+from repro.models import init_cache, init_model
+from repro.models.config import INPUT_SHAPES, ModelConfig
+from repro.models.layers import _dtype
+
+
+def sds(shape, dtype, mesh, spec: P):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def param_specs(cfg: ModelConfig, mesh) -> Tuple[Any, Any]:
+    """(ShapeDtypeStruct pytree, NamedSharding pytree) for the params."""
+    shapes = jax.eval_shape(
+        lambda k: init_model(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    shardings = param_shardings(shapes, mesh)
+    structs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return structs, shardings
+
+
+def opt_specs(param_structs, optimizer, mesh) -> Tuple[Any, Any]:
+    shapes = jax.eval_shape(optimizer.init, param_structs)
+    shardings = param_shardings(shapes, mesh)
+    structs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return structs, shardings
+
+
+def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, mesh
+                ) -> Tuple[Any, Any]:
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+    shardings = cache_shardings(shapes, mesh)
+    structs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings)
+    return structs, shardings
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh) -> Dict[str, Any]:
+    """Model-input structs for one assigned input shape.
+
+    train:    {"tokens","labels"[,"extra"]}  (n_workers, per_worker, S)
+    prefill:  {"tokens"[,"extra"]}           (B, S)
+    decode:   {"token","pos"}                (B, 1), scalar
+    """
+    shp = INPUT_SHAPES[shape_name]
+    sizes = mesh_axis_sizes(mesh)
+    dt = _dtype(cfg.param_dtype)
+    enc = cfg.encoder_seq or cfg.vision_seq
+
+    if shp.kind == "train":
+        n_workers = sizes["data"]
+        pw = shp.global_batch // n_workers
+        tspec = batch_pspec((n_workers, pw, shp.seq_len), mesh,
+                            worker_axis=True)
+        out = {
+            "tokens": sds((n_workers, pw, shp.seq_len), jnp.int32, mesh,
+                          tspec),
+            "labels": sds((n_workers, pw, shp.seq_len), jnp.int32, mesh,
+                          tspec),
+        }
+        if cfg.arch_type in ("audio", "vlm"):
+            espec = batch_pspec((n_workers, pw, enc, cfg.d_model), mesh,
+                                worker_axis=True)
+            out["extra"] = sds((n_workers, pw, enc, cfg.d_model), dt, mesh,
+                               espec)
+        return out
+
+    if shp.kind == "prefill":
+        b = shp.global_batch
+        tspec = batch_pspec((b, shp.seq_len), mesh, worker_axis=False)
+        out = {"tokens": sds((b, shp.seq_len), jnp.int32, mesh, tspec)}
+        if cfg.arch_type in ("audio", "vlm"):
+            espec = batch_pspec((b, enc, cfg.d_model), mesh,
+                                worker_axis=False)
+            out["extra"] = sds((b, enc, cfg.d_model), dt, mesh, espec)
+        return out
+
+    # decode
+    b = shp.global_batch
+    tspec = batch_pspec((b, 1), mesh, worker_axis=False)
+    return {
+        "token": sds((b, 1), jnp.int32, mesh, tspec),
+        "pos": sds((), jnp.int32, mesh, P()),
+    }

@@ -1,0 +1,79 @@
+"""Run the full dry-run matrix: every (arch x shape x mesh) combo as a
+subprocess (each needs its own 512-device jax init), one JSON artifact
+each.  Resumable: existing artifacts are skipped.
+
+    PYTHONPATH=src python -m repro.launch.sweep --out artifacts/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    # smallest first so failures surface early
+    "mamba2-130m", "gemma3-1b", "gemma-2b", "whisper-medium",
+    "llama3.2-3b", "qwen1.5-4b", "llama-3.2-vision-11b",
+    "llama4-scout-17b-a16e", "mixtral-8x22b", "jamba-1.5-large-398b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--timeout", type=int, default=3000)
+    ap.add_argument("--gar", default="bulyan-krum")
+    ap.add_argument("--impl", default="auto")
+    ap.add_argument("--pods", default="both", choices=["1", "2", "both"])
+    ap.add_argument("--only-arch", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    pods = {"1": [False], "2": [True], "both": [False, True]}[args.pods]
+    todo = [(a, s, mp) for mp in pods for a in ARCHS for s in SHAPES
+            if args.only_arch in (None, a)]
+    t_start = time.time()
+    for i, (arch, shape, mp) in enumerate(todo):
+        tag = f"{arch}.{shape}.pod{'2' if mp else '1'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path):
+            print(f"[{i+1}/{len(todo)}] {tag}: exists, skip", flush=True)
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--gar", args.gar,
+               "--impl", args.impl, "--out", path]
+        if mp:
+            cmd.append("--multi-pod")
+        t0 = time.time()
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            if r.returncode != 0:
+                with open(path, "w") as fh:
+                    json.dump({"arch": arch, "shape": shape,
+                               "multi_pod": mp, "error":
+                               r.stderr[-4000:]}, fh, indent=1)
+                status = "FAIL"
+            else:
+                rec = json.load(open(path))
+                status = ("skip(n/a)" if rec.get("skipped")
+                          else rec["roofline"]["dominant"]
+                          if "roofline" in rec else "ok")
+        except subprocess.TimeoutExpired:
+            with open(path, "w") as fh:
+                json.dump({"arch": arch, "shape": shape, "multi_pod": mp,
+                           "error": f"timeout {args.timeout}s"}, fh,
+                          indent=1)
+            status = "TIMEOUT"
+        dt = time.time() - t0
+        total = time.time() - t_start
+        print(f"[{i+1}/{len(todo)}] {tag}: {status} ({dt:.0f}s, "
+              f"total {total/60:.1f}m)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,7 @@
+"""Model stack: configs, transformer assembly, serving path, simple models."""
+from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
+from repro.models.transformer import forward, init_model
+from repro.models.decode import decode_step, init_cache, prefill
+
+__all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "decode_step",
+           "forward", "init_cache", "init_model", "prefill"]

@@ -1,0 +1,86 @@
+"""Primitive layers: norms, linear, embedding, FFN (dense + gated variants).
+
+Pure-function style: ``init_*`` builds a param dict, ``apply`` is a plain
+function.  No framework dependency — params are nested dicts of jnp arrays,
+which keeps pjit sharding rules and checkpointing trivial.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+def he_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan = fan_in if fan_in is not None else shape[0]
+    return (jax.random.normal(key, shape) / jnp.sqrt(fan)).astype(dtype)
+
+
+# -- rmsnorm -----------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- linear ------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    p = {"w": he_init(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- embedding ---------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)}
+
+
+def embed(p: dict, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def unembed(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["table"].T.astype(x.dtype)
+
+
+# -- dense FFN ---------------------------------------------------------------
+
+def init_ffn(key, d: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {"wi": he_init(k1, (d, d_ff), dtype),
+                "wg": he_init(k2, (d, d_ff), dtype),
+                "wo": he_init(k3, (d_ff, d), dtype)}
+    return {"wi": he_init(k1, (d, d_ff), dtype),
+            "wo": he_init(k3, (d_ff, d), dtype)}
+
+
+def ffn(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wi"])
+    elif act == "geglu":
+        h = jax.nn.gelu(x @ p["wg"], approximate=True) * (x @ p["wi"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"], approximate=True)
+    return h @ p["wo"]

@@ -1,0 +1,186 @@
+"""Mixture-of-Experts FFN with capacity-based (GShard/Switch-style) dispatch.
+
+Dense one-hot dispatch/combine einsums — the TPU-idiomatic formulation:
+tokens are routed to per-expert capacity buffers, experts run as one batched
+(stacked) matmul, results are combined with the gate weights.  The expert
+axis is the natural target for expert-parallel sharding over the `model`
+mesh axis (see repro.dist.sharding).  Tokens overflowing an expert's
+capacity are dropped (their FFN output is zero; the residual path carries
+them), matching Switch Transformer semantics.
+
+Returns a Switch-style load-balance auxiliary loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+#: process-wide toggle (set by the launcher): when True, expert weights are
+#: sharding-constrained to tensor-parallel-only specs at their use site.
+#: With FSDP ("data") storage sharding on a *contraction* dim, XLA's SPMD
+#: partitioner otherwise computes every worker's expert hiddens on every
+#: data shard and all-reduces them — redundant compute plus the dominant
+#: collective (measured on mixtral train_4k, §Perf iter 3).  The constraint
+#: turns that into one small per-layer weight all-gather instead.
+EXPERT_WEIGHT_GATHER: bool = False
+
+
+def _gathered_experts(experts: dict) -> dict:
+    if not EXPERT_WEIGHT_GATHER:
+        return experts
+    from jax.sharding import PartitionSpec as P
+    try:
+        out = {}
+        for name, w in experts.items():
+            if name == "wo":                      # (E, d_ff, d): row-parallel
+                spec = P(None, "model", None)
+            else:                                 # wi/wg (E, d, d_ff): column
+                spec = P(None, None, "model")
+            out[name] = jax.lax.with_sharding_constraint(w, spec)
+        return out
+    except Exception:
+        return experts
+
+
+def init_moe(key, d: int, d_ff: int, n_experts: int, n_shared: int,
+             act: str, dtype) -> dict:
+    keys = jax.random.split(key, 3)
+    n_mats = 3 if act in ("swiglu", "geglu") else 2
+    ek = jax.random.split(keys[0], n_experts)
+    experts = jax.vmap(lambda k: layers.init_ffn(k, d, d_ff, act, dtype))(ek)
+    p = {"router": layers.he_init(keys[1], (d, n_experts), jnp.float32),
+         "experts": experts}
+    if n_shared > 0:
+        p["shared"] = layers.init_ffn(keys[2], d, d_ff * n_shared, act, dtype)
+    return p
+
+
+def moe_ffn(p: dict, x: jnp.ndarray, *, top_k: int, act: str,
+            capacity_factor: float = 1.25, impl: str = "einsum"
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out: (B, S, D), aux_loss: scalar).
+
+    impl="einsum": GShard-style dense one-hot dispatch/combine — simple,
+    but materializes (T, E, C) tensors whose collectives dominate at scale
+    (measured in EXPERIMENTS.md §Perf).
+    impl="scatter": scatter/gather dispatch — same routing semantics
+    (identical positions/drops), never materializes (T, E, C).
+    """
+    if impl == "scatter":
+        return _moe_ffn_scatter(p, x, top_k=top_k, act=act,
+                                capacity_factor=capacity_factor)
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])        # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(gates, top_k)      # (T, k)
+    # renormalize the chosen gates (mixtral-style)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(math.ceil(top_k * t / e * capacity_factor)))
+
+    # build (T, E, C) dispatch and combine tensors, one top-k slot at a time
+    dispatch = jnp.zeros((t, e, capacity), jnp.bool_)
+    combine = jnp.zeros((t, e, capacity), jnp.float32)
+    fill = jnp.zeros((e,), jnp.int32)                      # tokens per expert
+    for slot in range(top_k):
+        idx = gate_idx[:, slot]                            # (T,)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)   # (T, E)
+        pos = fill[None, :] + jnp.cumsum(onehot, axis=0) - onehot  # (T, E)
+        pos_tok = jnp.sum(pos * onehot, axis=1)            # (T,)
+        keep = pos_tok < capacity
+        disp = (jax.nn.one_hot(pos_tok, capacity, dtype=jnp.float32)
+                [:, None, :] * onehot[:, :, None].astype(jnp.float32))
+        disp = disp * keep[:, None, None]
+        dispatch = dispatch | (disp > 0)
+        combine = combine + disp * gate_vals[:, slot][:, None, None]
+        fill = fill + jnp.sum(onehot, axis=0)
+
+    # dispatch tokens to expert buffers: (E, C, D)
+    exp_in = jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), xt)
+
+    def run_expert(ep, xe):
+        return layers.ffn(ep, xe, act)
+
+    exp_out = jax.vmap(run_expert)(p["experts"], exp_in)   # (E, C, D)
+    out = jnp.einsum("ecd,tec->td", exp_out.astype(jnp.float32), combine)
+    out = out.astype(x.dtype).reshape(b, s, d)
+
+    if "shared" in p:
+        out = out + layers.ffn(p["shared"], x, act)
+
+    # Switch load-balance loss: E * sum_e (mean gate_e * mean dispatch_e)
+    me = jnp.mean(gates, axis=0)                           # (E,)
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out, aux
+
+
+def _moe_ffn_scatter(p: dict, x: jnp.ndarray, *, top_k: int, act: str,
+                     capacity_factor: float = 1.25
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter/gather dispatch: routing-identical to the einsum path (same
+    cumsum positions, same capacity drops) but the only O(T * E) tensor is
+    the int32 position cumsum; token movement is a scatter-add into the
+    (E, C, D) expert buffers and a gather back."""
+    b, s, d = x.shape
+    e = p["router"].shape[1]
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])        # (T, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(gates, top_k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    capacity = max(1, int(math.ceil(top_k * t / e * capacity_factor)))
+
+    exp_in = jnp.zeros((e, capacity, d), x.dtype)
+    fill = jnp.zeros((e,), jnp.int32)
+    slots = []
+    for slot in range(top_k):
+        idx = gate_idx[:, slot]                            # (T,)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)   # (T, E)
+        pos = fill[None, :] + jnp.cumsum(onehot, axis=0) - onehot
+        pos_tok = jnp.sum(pos * onehot, axis=1)            # (T,)
+        keep = pos_tok < capacity
+        pc = jnp.minimum(pos_tok, capacity - 1)
+        exp_in = exp_in.at[idx, pc].add(
+            jnp.where(keep[:, None], xt, 0).astype(exp_in.dtype))
+        slots.append((idx, pc, keep))
+        fill = fill + jnp.sum(onehot, axis=0)
+
+    def run_expert(ep, xe):
+        return layers.ffn(ep, xe, act)
+
+    exp_out = jax.vmap(run_expert)(_gathered_experts(p["experts"]),
+                                   exp_in)   # (E, C, D)
+
+    out = jnp.zeros((t, d), jnp.float32)
+    for slot, (idx, pc, keep) in enumerate(slots):
+        # gather + weight in the compute dtype (keeps expert cotangents
+        # bf16 on bf16 models — §Perf iter 2), accumulate in fp32
+        y = exp_out[idx, pc]                               # gather (T, D)
+        w = (gate_vals[:, slot] * keep.astype(jnp.float32)).astype(y.dtype)
+        out = out + (y * w[:, None]).astype(jnp.float32)
+    out = out.astype(x.dtype).reshape(b, s, d)
+
+    if "shared" in p:
+        out = out + layers.ffn(p["shared"], x, act)
+
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(gate_idx[:, 0], e, dtype=jnp.float32), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return out, aux

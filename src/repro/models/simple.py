@@ -1,0 +1,90 @@
+"""The paper's own evaluation models (§5.1).
+
+MNIST: fully-connected 784 -> 100 -> 10 (d ~ 8e4 parameters).
+CIFAR-10: conv(3x3,16) -> maxpool(3x3) -> conv(4x4,64) -> maxpool(4x4)
+          -> fc 384 -> fc 192 -> softmax (d ~ 1e6 parameters).
+
+Both use ReLU hidden activations, softmax output, max cross-entropy loss,
+L2 regularization 1e-4, Xavier init — exactly as §5.1 specifies.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+L2_REG = 1e-4
+
+
+def _xavier(key, shape):
+    fan_in, fan_out = shape[-2] * (shape[0] * shape[1] if len(shape) == 4
+                                   else 1), shape[-1]
+    if len(shape) == 4:
+        fan_in = shape[0] * shape[1] * shape[2]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, minval=-lim, maxval=lim)
+
+
+# -- MNIST MLP ----------------------------------------------------------------
+
+def init_mnist_mlp(key) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": _xavier(k1, (784, 100)), "b1": jnp.zeros((100,)),
+        "w2": _xavier(k2, (100, 10)), "b2": jnp.zeros((10,)),
+    }
+
+
+def mnist_mlp_forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, 784) -> logits (B, 10)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+# -- CIFAR CNN ----------------------------------------------------------------
+
+def init_cifar_cnn(key) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "c1": _xavier(ks[0], (3, 3, 3, 16)), "cb1": jnp.zeros((16,)),
+        "c2": _xavier(ks[1], (4, 4, 16, 64)), "cb2": jnp.zeros((64,)),
+        # 32 -> conv(s1) 32 -> pool3 s2 -> 15 -> conv 15 -> pool4 s3 -> 4
+        "w1": _xavier(ks[2], (4 * 4 * 64, 384)), "b1": jnp.zeros((384,)),
+        "w2": _xavier(ks[3], (384, 192)), "b2": jnp.zeros((192,)),
+        "w3": _xavier(jax.random.fold_in(ks[3], 1), (192, 10)),
+        "b3": jnp.zeros((10,)),
+    }
+
+
+def cifar_cnn_forward(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, 32, 32, 3) -> logits (B, 10)."""
+    h = jax.lax.conv_general_dilated(
+        x, params["c1"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["cb1"]
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                              (1, 3, 3, 1), (1, 2, 2, 1), "VALID")
+    h = jax.lax.conv_general_dilated(
+        h, params["c2"], (1, 1), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + params["cb2"]
+    h = jax.nn.relu(h)
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max,
+                              (1, 4, 4, 1), (1, 3, 3, 1), "VALID")
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["w1"] + params["b1"])
+    h = jax.nn.relu(h @ params["w2"] + params["b2"])
+    return h @ params["w3"] + params["b3"]
+
+
+def classification_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                        params: dict) -> jnp.ndarray:
+    """Cross entropy + L2 (paper §5.1)."""
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    l2 = sum(jnp.sum(w * w) for w in jax.tree_util.tree_leaves(params))
+    return nll + L2_REG * l2
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))

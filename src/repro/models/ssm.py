@@ -1,0 +1,251 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Chunked SSD algorithm from the Mamba-2 paper (arXiv:2405.21060, Listing 1),
+pure jnp: within a chunk the recurrence is evaluated in its "attention dual"
+form (a causally-masked (Q, Q) score matmul — MXU work); across chunks a
+short ``lax.scan`` carries the (H, N, P) state.  This is the TPU-friendly
+layout: the sequential dependency is only over S/Q chunk steps, everything
+inside a chunk is dense matmuls.
+
+Single-token decode uses the exact recurrent form with a constant-size
+state — the reason mamba2/jamba run the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# core SSD
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                B: jnp.ndarray, C: jnp.ndarray, chunk: int = 128,
+                return_final_state: bool = False):
+    """x: (b,s,h,p), dt: (b,s,h) (>0), A: (h,) (<0), B/C: (b,s,n).
+    Returns y: (b,s,h,p) for the SSM  h' = exp(dt A) h + dt B x ; y = C h
+    (optionally also the final state (b,h,n,p) for prefill).
+
+    NOTE when ``return_final_state``: padding a chunk dilutes the final
+    state only through dt = 0 entries, which contribute nothing — but the
+    padded chunk's decay would corrupt it, so callers must pass s % chunk
+    == 0 or we trim the pad contribution by construction (dt = 0 => decay
+    1, increment 0: safe).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    sp = x.shape[1]
+    nc = sp // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h)
+    Bc = B.reshape(b, nc, chunk, n)
+    Cc = C.reshape(b, nc, chunk, n)
+
+    da = dtc * A[None, None, None, :]                  # (b,nc,q,h), negative
+    seg = jnp.cumsum(da, axis=2)                       # inclusive prefix
+    xd = xc * dtc[..., None]                           # dt-weighted input
+
+    # --- intra-chunk (the "attention dual") -------------------------------
+    cb = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)         # (b,nc,q,q)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    # mask the exponent BEFORE exp: non-causal entries have positive
+    # exponents whose exp overflows, and where(mask, exp, 0) still
+    # propagates 0 * inf = NaN through the backward pass
+    diff = seg[:, :, :, None, :] - seg[:, :, None, :, :]
+    diff = jnp.where(causal[None, None, :, :, None], diff, -1e30)
+    scores = cb[..., None] * jnp.exp(diff)             # (b,nc,l,s,h)
+    y_intra = jnp.einsum("bclsh,bcshp->bclhp", scores, xd)
+
+    # --- chunk boundary states --------------------------------------------
+    seg_end = seg[:, :, -1:, :]                        # (b,nc,1,h)
+    decay_to_end = jnp.exp(seg_end - seg)              # (b,nc,q,h)
+    states = jnp.einsum("bcsh,bcsn,bcshp->bchnp", decay_to_end, Bc, xd)
+    chunk_decay = jnp.exp(seg_end[:, :, 0, :])         # (b,nc,h)
+
+    # --- inter-chunk recurrence -------------------------------------------
+    def step(Hprev, inp):
+        st, dk = inp                                   # (b,h,n,p), (b,h)
+        Hnew = Hprev * dk[:, :, None, None] + st
+        return Hnew, Hprev
+
+    H0 = jnp.zeros((b, h, n, p), x.dtype)
+    H_final, Hprev = jax.lax.scan(
+        step, H0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    Hprev = jnp.moveaxis(Hprev, 0, 1)                  # (b,nc,h,n,p)
+
+    y_inter = jnp.einsum("bclh,bcln,bchnp->bclhp",
+                         jnp.exp(seg), Cc, Hprev)
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    if return_final_state:
+        return y, H_final
+    return y
+
+
+def ssd_recurrent_step(state: jnp.ndarray, x1: jnp.ndarray, dt1: jnp.ndarray,
+                       A: jnp.ndarray, B1: jnp.ndarray, C1: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One decode step.  state: (b,h,n,p); x1: (b,h,p); dt1: (b,h);
+    B1/C1: (b,n).  Returns (new_state, y: (b,h,p))."""
+    decay = jnp.exp(dt1 * A[None, :])                  # (b,h)
+    inc = jnp.einsum("bn,bhp->bhnp", B1, x1 * dt1[..., None])
+    new_state = state * decay[:, :, None, None] + inc
+    y = jnp.einsum("bn,bhnp->bhp", C1, new_state)
+    return new_state, y
+
+
+# ---------------------------------------------------------------------------
+# the mamba2 block (in_proj -> conv -> SSD -> gated norm -> out_proj)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    h = cfg.ssm_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * n
+    return {
+        "in_proj": layers.he_init(k1, (d, 2 * d_in + 2 * n + h), dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_ch))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": layers.init_rmsnorm(d_in, dtype),
+        "out_proj": layers.he_init(k3, (d_in, d), dtype),
+    }
+
+
+def _split_proj(proj, d_in, n, h):
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:2 * d_in + 2 * n]
+    dt = proj[..., 2 * d_in + 2 * n:]
+    return z, xbc, dt
+
+
+def mamba_forward(p: dict, x: jnp.ndarray, cfg, chunk: int = 128
+                  ) -> jnp.ndarray:
+    """x: (B, S, D) -> (B, S, D), full-sequence (training / prefill)."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n, h, hd = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, d_in, n, h)
+
+    # causal depthwise conv over (x, B, C) channels
+    k = p["conv_w"].shape[0]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i:i + s] * p["conv_w"][i][None, None, :]
+               for i in range(k)) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+
+    xs = conv[..., :d_in].reshape(b, s, h, hd)
+    B_ = conv[..., d_in:d_in + n]
+    C_ = conv[..., d_in + n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y = ssd_chunked(xs.astype(jnp.float32), dt, A,
+                    B_.astype(jnp.float32), C_.astype(jnp.float32),
+                    chunk=chunk)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def mamba_prefill(p: dict, x: jnp.ndarray, cfg, chunk: int = 128
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence forward returning (y: (B,S,D), cache) — same math as
+    ``mamba_forward`` but also stashes the final SSM state and the last
+    ssm_conv - 1 conv inputs for subsequent decode steps."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n, h, hd = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    proj = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(proj, d_in, n, h)
+
+    k = p["conv_w"].shape[0]
+    xbc_pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(xbc_pad[:, i:i + s] * p["conv_w"][i][None, None, :]
+               for i in range(k)) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+
+    xs = conv[..., :d_in].reshape(b, s, h, hd)
+    B_ = conv[..., d_in:d_in + n]
+    C_ = conv[..., d_in + n:]
+    dt_ = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    y, H_final = ssd_chunked(xs.astype(jnp.float32), dt_, A,
+                             B_.astype(jnp.float32), C_.astype(jnp.float32),
+                             chunk=chunk, return_final_state=True)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+
+    # conv history: last k-1 raw xbc inputs (zero-padded when s < k-1)
+    hist = jax.lax.dynamic_slice_in_dim(
+        jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0))), s, k - 1, axis=1)
+    cache = {"conv": hist, "state": H_final}
+    return out, cache
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    d_in = cfg.ssm_expand * cfg.d_model
+    n, h, hd = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    conv_ch = d_in + 2 * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, h, n, hd), jnp.float32),
+    }
+
+
+def mamba_decode_step(p: dict, cache: dict, x1: jnp.ndarray, cfg
+                      ) -> Tuple[dict, jnp.ndarray]:
+    """x1: (B, 1, D) one token.  Returns (new_cache, y: (B, 1, D))."""
+    b, _, d = x1.shape
+    d_in = cfg.ssm_expand * d
+    n, h, hd = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+
+    proj = x1[:, 0] @ p["in_proj"]                     # (B, ...)
+    z, xbc, dt = _split_proj(proj, d_in, n, h)
+
+    hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    conv = jnp.einsum("bkc,kc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)
+    new_conv = hist[:, 1:]
+
+    xs = conv[..., :d_in].reshape(b, h, hd)
+    B_ = conv[..., d_in:d_in + n]
+    C_ = conv[..., d_in + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    new_state, y = ssd_recurrent_step(
+        cache["state"], xs.astype(jnp.float32), dt, A,
+        B_.astype(jnp.float32), C_.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, d_in).astype(x1.dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = (y @ p["out_proj"])[:, None, :]
+    return {"conv": new_conv, "state": new_state}, out

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Optimizer, adam, adamw, fading_lr,
+                                    get_optimizer, momentum, sgd)
+
+__all__ = ["Optimizer", "adam", "adamw", "fading_lr", "get_optimizer",
+           "momentum", "sgd"]

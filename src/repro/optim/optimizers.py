@@ -1,0 +1,113 @@
+"""Optimizers + the paper's fading learning-rate schedule.
+
+Self-contained (no optax): each optimizer is an ``Optimizer(init, update)``
+pair over parameter pytrees.  ``update(grads, state, params) ->
+(new_params, new_state)``; the learning rate is a schedule ``step -> lr``
+evaluated in-graph (works under jit with a traced step).
+
+The paper (§5.1) uses plain SGD with eta(epoch) = eta0 * r / (epoch + r).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def fading_lr(eta0: float, r: float) -> Schedule:
+    """Paper §5.1: eta(t) = eta0 * r / (t + r)."""
+    return lambda step: jnp.asarray(eta0 * r, jnp.float32) / (step + r)
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[..., Any]  # (grads, state, params, step) -> (params, state)
+
+
+def _tmap(fn, *trees):
+    return jax.tree_util.tree_map(fn, *trees)
+
+
+def sgd(lr: Union[float, Schedule]) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        eta = sched(state["step"])
+        new = _tmap(lambda p, g: (p.astype(jnp.float32)
+                                  - eta * g.astype(jnp.float32)
+                                  ).astype(p.dtype), params, grads)
+        return new, {"step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: Union[float, Schedule], beta: float = 0.9) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(lambda p: jnp.zeros(p.shape, jnp.float32), params)}
+
+    def update(grads, state, params):
+        eta = sched(state["step"])
+        m = _tmap(lambda m, g: beta * m + g.astype(jnp.float32),
+                  state["m"], grads)
+        new = _tmap(lambda p, m: (p.astype(jnp.float32) - eta * m
+                                  ).astype(p.dtype), params, m)
+        return new, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr: Union[float, Schedule], b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(grads, state, params):
+        t = state["step"] + 1
+        eta = sched(state["step"])
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v, g: b2 * v
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m, v):
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * step).astype(p.dtype)
+
+        new = _tmap(upd, params, m, v)
+        return new, {"step": t, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, weight_decay: float = 0.01, **kw) -> Optimizer:
+    return adam(lr, weight_decay=weight_decay, **kw)
+
+
+def get_optimizer(name: str, lr, **kw) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam,
+            "adamw": adamw}[name](lr, **kw)

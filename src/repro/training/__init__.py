@@ -1,0 +1,4 @@
+from repro.training.trainer import (ByzantineSpec, ByzantineTrainer,
+                                    make_byzantine_step)
+
+__all__ = ["ByzantineSpec", "ByzantineTrainer", "make_byzantine_step"]

@@ -1,0 +1,133 @@
+"""Byzantine distributed-SGD training engine (single-host reference).
+
+Faithful to the paper's protocol (§2): each of n - f honest workers draws
+an i.i.d. mini-batch and submits a stochastic gradient; the omniscient
+adversary reads them and fabricates f Byzantine submissions; the master
+aggregates with a GAR and updates the model.  Everything happens in-graph
+(the adversary included) so a training step is one jit'd call.
+
+The mesh-sharded production variant lives in ``repro.dist.train`` — this
+module is the semantics reference it is tested against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attacks as attacks_lib
+from repro.core import gars as gars_lib
+from repro.core import pytree as pt
+from repro.optim import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class ByzantineSpec:
+    n_workers: int                  # total n = honest + byzantine
+    f: int                          # byzantine count (and GAR's bound)
+    gar: str = "bulyan-krum"
+    attack: str = "none"
+    attack_kwargs: tuple = ()       # (("gamma", 10.0), ...)
+    declared_f: Optional[int] = None  # f the master *assumes* (>= actual)
+
+    @property
+    def n_honest(self) -> int:
+        return self.n_workers - self.f
+
+    @property
+    def f_declared(self) -> int:
+        return self.declared_f if self.declared_f is not None else self.f
+
+    def validate(self) -> None:
+        need = gars_lib.quorum(self.gar, self.f_declared)
+        if self.n_workers < need:
+            raise ValueError(
+                f"{self.gar} needs n >= {need} for f={self.f_declared}, "
+                f"got n={self.n_workers}")
+
+
+def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
+                        spec: ByzantineSpec,
+                        attack_on: bool = True) -> Callable:
+    """Build a jit-able training step.
+
+    loss_fn(params, x, y) -> scalar loss.
+    batch: x (n_honest, b, ...), y (n_honest, b, ...) — per-honest-worker.
+    Returns step(params, opt_state, x, y, key) ->
+        (params, opt_state, metrics dict).
+    """
+    spec.validate()
+    gar = gars_lib.get_gar(spec.gar)
+    attack = attacks_lib.get_attack(spec.attack) if attack_on else None
+    akw = dict(spec.attack_kwargs)
+
+    def step(params, opt_state, x, y, key):
+        grad_fn = jax.grad(loss_fn)
+        worker_grads = jax.vmap(lambda xi, yi: grad_fn(params, xi, yi))(x, y)
+        flat, ctx = pt.stack_flatten(worker_grads)      # (n_honest, d)
+
+        if attack is not None and spec.f > 0:
+            kw = dict(akw)
+            if attack in (attacks_lib.omniscient_lp,
+                          attacks_lib.omniscient_linf):
+                kw.setdefault("step", opt_state["step"])
+            byz = attack(flat, spec.f, key, **kw)
+            full = jnp.concatenate([flat, byz], axis=0)
+        else:
+            full = flat
+        n_eff = full.shape[0]
+
+        res = gar(full, spec.f_declared)
+        agg = pt.unflatten(res.gradient, ctx)
+        new_params, new_state = optimizer.update(agg, opt_state, params)
+
+        honest_mean = jnp.mean(flat, axis=0)
+        metrics = {
+            "loss": loss_fn(params, x[0], y[0]),
+            "byz_weight": jnp.sum(res.selected[spec.n_honest:])
+            if n_eff > spec.n_honest else jnp.zeros(()),
+            "agg_dev": jnp.linalg.norm(res.gradient - honest_mean),
+            "grad_norm": jnp.linalg.norm(res.gradient),
+        }
+        return new_params, new_state, metrics
+
+    return step
+
+
+class ByzantineTrainer:
+    """Convenience loop: data -> jit step -> metrics history."""
+
+    def __init__(self, loss_fn, params, optimizer: Optimizer,
+                 spec: ByzantineSpec, seed: int = 0):
+        self.spec = spec
+        self.params = params
+        self.optimizer = optimizer
+        self.opt_state = optimizer.init(params)
+        self._step_attacked = jax.jit(
+            make_byzantine_step(loss_fn, optimizer, spec, attack_on=True))
+        self._step_clean = jax.jit(
+            make_byzantine_step(loss_fn, optimizer, spec, attack_on=False))
+        self.key = jax.random.PRNGKey(seed)
+        self.history: list = []
+
+    def run(self, batcher, n_steps: int, attack_until: Optional[int] = None,
+            eval_fn: Optional[Callable] = None, eval_every: int = 0,
+            start_step: int = 0):
+        for t in range(start_step, start_step + n_steps):
+            x, y = batcher.batch(t)
+            self.key, sub = jax.random.split(self.key)
+            attacked = (attack_until is None) or (t < attack_until)
+            fn = self._step_attacked if (attacked and self.spec.f > 0
+                                         and self.spec.attack != "none"
+                                         ) else self._step_clean
+            self.params, self.opt_state, m = fn(
+                self.params, self.opt_state, jnp.asarray(x), jnp.asarray(y),
+                sub)
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = t
+            if eval_fn and eval_every and t % eval_every == 0:
+                rec["eval_acc"] = float(eval_fn(self.params))
+            self.history.append(rec)
+        return self.history

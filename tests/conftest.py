@@ -1,0 +1,9 @@
+import os
+import sys
+
+# src layout without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: no XLA_FLAGS here by design — tests see the real single CPU device.
+# Multi-device behaviour is tested via subprocesses (test_dist.py) so the
+# 512-device override never leaks into this process.

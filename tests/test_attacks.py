@@ -1,0 +1,103 @@
+"""Attack tests: the §3.2 mechanism, gamma_m search, and scaling claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (find_gamma_max, gamma_closed_form, get_attack,
+                        get_gar, make_selection_checker)
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _honest(n_h, d, key=KEY):
+    return jax.random.normal(key, (n_h, d)) * 0.5 + 1.0
+
+
+class TestGammaSearch:
+    def test_selected_at_found_gamma_not_above(self):
+        n_h, f, d = 9, 2, 256
+        honest = _honest(n_h, d)
+        check = make_selection_checker("krum", f)
+        e = jnp.zeros((d,)).at[0].set(1.0)
+        g = float(find_gamma_max(honest, f, e, check))
+        assert g > 0
+
+        def selected(gamma):
+            byz = jnp.mean(honest, 0)[None] + gamma * e[None]
+            return bool(check(jnp.concatenate(
+                [honest, jnp.repeat(byz, f, 0)])))
+
+        assert selected(g * 0.95)
+        assert not selected(g * 1.50)
+
+    def test_gamma_grows_with_sqrt_d(self):
+        """The paper's core claim: gamma_m = Omega(sqrt(d)) for p=2."""
+        f = 2
+        gs = []
+        for d in (64, 256, 1024):
+            honest = _honest(9, d, jax.random.fold_in(KEY, d))
+            check = make_selection_checker("krum", f)
+            e = jnp.zeros((d,)).at[0].set(1.0)
+            gs.append(float(find_gamma_max(honest, f, e, check)))
+        # quadrupling d should roughly double gamma
+        assert gs[1] / gs[0] > 1.5
+        assert gs[2] / gs[1] > 1.5
+
+    def test_closed_form_order_of_magnitude(self):
+        f, d = 2, 1024
+        honest = _honest(9, d)
+        check = make_selection_checker("krum", f)
+        e = jnp.zeros((d,)).at[0].set(1.0)
+        g = float(find_gamma_max(honest, f, e, check))
+        db = float(2 / np.sqrt(np.pi) * jnp.mean(jnp.std(honest, axis=0)))
+        approx = gamma_closed_form("krum", d, f, db)
+        assert 0.1 < g / approx < 10.0
+
+
+class TestAttackEffects:
+    def test_krum_fully_poisoned_bulyan_clamped(self):
+        """The headline result: the attack drives Krum's output by
+        Omega(sqrt(d)) on one coordinate; Bulyan stays within the honest
+        coordinate spread (Prop 2)."""
+        n_h, f, d = 9, 2, 2048
+        honest = _honest(n_h, d)
+        byz = get_attack("omniscient_lp")(honest, f, None, gar_name="krum")
+        full = jnp.concatenate([honest, byz])
+        mean = jnp.mean(honest, axis=0)
+        krum_dev = float(jnp.max(jnp.abs(
+            get_gar("krum")(full, f).gradient - mean)))
+        bul_dev = float(jnp.max(jnp.abs(
+            get_gar("bulyan-krum")(full, f).gradient - mean)))
+        sigma_c = float(jnp.mean(jnp.std(honest, axis=0)))
+        assert krum_dev > 10 * sigma_c          # poisoned ~ sqrt(d) sigma
+        assert bul_dev < 10 * sigma_c           # clamped ~ sigma
+        assert krum_dev / bul_dev > 5.0
+
+    @pytest.mark.parametrize("attack,kw", [
+        ("alie", {}), ("ipm", {}), ("signflip", {}), ("zero", {}),
+        ("mimic", {}), ("omniscient_linf", {"gamma": "closed"}),
+        ("omniscient_lp", {"gamma": "closed"}),
+        ("omniscient_lp", {"gamma": "closed", "coord": "top"}),
+    ])
+    def test_attacks_produce_valid_submissions(self, attack, kw):
+        honest = _honest(9, 128)
+        byz = get_attack(attack)(honest, 2, jax.random.PRNGKey(9), **kw)
+        assert byz.shape == (2, 128)
+        assert bool(jnp.all(jnp.isfinite(byz)))
+
+    def test_random_attack_needs_key(self):
+        honest = _honest(9, 64)
+        byz = get_attack("random")(honest, 2, jax.random.PRNGKey(1))
+        assert byz.shape == (2, 64)
+
+    def test_averaging_fully_controlled(self):
+        """Lemma 1 of Blanchard et al.: a single Byzantine worker drives a
+        linear GAR anywhere."""
+        honest = _honest(10, 32)
+        target = 77.0 * jnp.ones((32,))
+        n = 11
+        byz = (n * target - jnp.sum(honest, axis=0))[None, :]
+        full = jnp.concatenate([honest, byz])
+        out = get_gar("average")(full, 1).gradient
+        np.testing.assert_allclose(out, target, rtol=1e-3)

@@ -1,0 +1,61 @@
+"""Dry-run smoke: one reduced (arch x shape) lower+compile in a 512-device
+subprocess, validating the artifact schema the roofline analysis consumes.
+The full-size matrix is produced by repro.launch.sweep (see EXPERIMENTS.md).
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    return subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
+                           *args], capture_output=True, text=True,
+                          timeout=timeout, env=env)
+
+
+@pytest.mark.slow
+def test_reduced_dryrun_train_artifact():
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "a.json")
+        r = _run(["--arch", "mamba2-130m", "--shape", "train_4k",
+                  "--reduced", "--out", out])
+        assert r.returncode == 0, r.stderr[-3000:]
+        rec = json.load(open(out))
+    assert rec["mesh"] == "16x16"
+    roof = rec["roofline"]
+    for k in ("compute_s", "memory_s", "collective_s", "dominant",
+              "useful_flops_ratio"):
+        assert k in roof
+    assert roof["compute_s"] > 0
+    assert sum(v["count"] for v in rec["collectives"].values()) > 0
+
+
+@pytest.mark.slow
+def test_reduced_dryrun_multipod_decode():
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "b.json")
+        r = _run(["--arch", "gemma3-1b", "--shape", "decode_32k",
+                  "--reduced", "--multi-pod", "--out", out])
+        assert r.returncode == 0, r.stderr[-3000:]
+        rec = json.load(open(out))
+    assert rec["mesh"] == "2x16x16"
+    assert rec["multi_pod"] is True
+
+
+def test_long_500k_skip_rules():
+    from repro.configs import shape_applicable
+    assert shape_applicable("mamba2-130m", "long_500k")
+    assert shape_applicable("mixtral-8x22b", "long_500k")
+    assert shape_applicable("jamba-1.5-large-398b", "long_500k")
+    assert not shape_applicable("gemma-2b", "long_500k")
+    assert not shape_applicable("whisper-medium", "long_500k")
+    assert not shape_applicable("llama-3.2-vision-11b", "long_500k")
+    assert shape_applicable("gemma-2b", "train_4k")
