@@ -5,6 +5,11 @@
   * Bulyan(Krum) amortizes distance computation: its cost stays within a
     small factor of plain Krum (paper: same O(n^2 d) up to constants),
     NOT theta times Krum.
+
+``main_dist`` benches the distributed path (``repro.dist.robust``) against
+the flat core on the same data: per-leaf Gram accumulation + windowed
+coordinate phase vs one flat (n, d) matrix.  On one device the two should
+be within a small factor; the distributed form is the one that shards.
 """
 from __future__ import annotations
 
@@ -15,6 +20,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import emit
 from repro.core import get_gar
+from repro.core import pytree as pt
+from repro.dist.robust import distributed_aggregate
 
 
 def _time(fn, *args, reps: int = 5) -> float:
@@ -54,5 +61,38 @@ def main(ds=(10_000, 100_000, 1_000_000), ns=(15, 39)) -> None:
              f"t(d*100)/t(d)={lin:.1f};expected~100(O(n^2 d))")
 
 
+def _stacked_tree(key, n: int, d_total: int):
+    """Multi-leaf gradient tree (total d coords) mimicking a real param
+    tree: a big matrix leaf, a medium one, and a small vector leaf."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    d_big = int(d_total * 0.8)
+    d_mid = int(d_total * 0.19)
+    d_small = d_total - d_big - d_mid
+    return {"w_big": jax.random.normal(k1, (n, d_big // 64, 64)),
+            "w_mid": jax.random.normal(k2, (n, d_mid)),
+            "bias": jax.random.normal(k3, (n, d_small))}
+
+
+def main_dist(ds=(100_000, 1_000_000), ns=(15, 39)) -> None:
+    """Distributed (tree-aware) path vs flat core on identical data."""
+    key = jax.random.PRNGKey(1)
+    for n in ns:
+        f = (n - 3) // 4
+        for d in ds:
+            tree = _stacked_tree(key, n, d)
+            flat, _ = pt.stack_flatten(tree)
+            for name in ("krum", "bulyan-krum", "trimmed_mean"):
+                gar = get_gar(name)
+                flat_fn = jax.jit(lambda x, gar=gar: gar(x, f).gradient)
+                tree_fn = jax.jit(
+                    lambda t, name=name: distributed_aggregate(
+                        t, f, name)[0])
+                us_flat = _time(flat_fn, flat)
+                us_tree = _time(tree_fn, tree)
+                emit(f"gar_throughput/dist_{name}_n{n}_d{d}", us_tree,
+                     f"flat_us={us_flat:.0f};ratio={us_tree / us_flat:.2f}")
+
+
 if __name__ == "__main__":
     main()
+    main_dist()

@@ -30,6 +30,7 @@ def main() -> None:
     benches = [
         ("leeway", lambda: leeway_scaling.main()),
         ("gar_throughput", lambda: gar_throughput.main()),
+        ("gar_throughput_dist", lambda: gar_throughput.main_dist()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
         ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),
         ("fig45", lambda: fig45_bulyan_defense.main(steps=steps45)),

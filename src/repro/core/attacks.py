@@ -116,13 +116,24 @@ def _delta_bar(honest: jnp.ndarray) -> jnp.ndarray:
     return 2.0 / jnp.sqrt(jnp.pi) * jnp.mean(jnp.std(honest, axis=0))
 
 
+def _closed_rule(gar_name: str) -> str:
+    """Normalize a GAR name to the rule family §B's closed forms cover:
+    ``bulyan-<base>`` collapses to its base, anything without its own
+    estimate falls back to krum's."""
+    base = (gar_name.split("-", 1)[1] if gar_name.startswith("bulyan-")
+            else gar_name)
+    return base if base in ("krum", "geomed", "brute") else "krum"
+
+
 def _closed_gamma(rule: str, d: int, f: int, db: jnp.ndarray, p: int = 2
                   ) -> jnp.ndarray:
     """Traced-friendly version of ``gamma_closed_form`` (§B.2/§B.3)."""
+    rule = _closed_rule(rule)
     if rule == "brute":
         return ((1.0 - 2.0 ** (-p / 2.0)) * d) ** (1.0 / p) * db
     q = 2.0 if rule == "krum" else 1.0
-    inner = jnp.maximum((f + 1.0) / 2.0 ** (p / q) - 2.0 ** (-p / 2.0), 1e-9)
+    inner = jnp.maximum(((f + 1.0) / 2.0) ** (p / q) - 2.0 ** (-p / 2.0),
+                        1e-9)
     return inner ** (1.0 / p) * d ** (1.0 / p) * db
 
 

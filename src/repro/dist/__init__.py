@@ -1,0 +1,37 @@
+"""Mesh-sharded distributed runtime.
+
+The core GARs (``repro.core``) operate on a flat ``(n, d)`` matrix — fine
+for one device, fatal at scale: materializing every worker's full gradient
+vector in one array defeats model-parallel sharding.  This package is the
+production path:
+
+  mesh.py      device meshes (host smoke meshes + the production pods)
+  sharding.py  NamedSharding/PartitionSpec rules for params, optimizer
+               state, worker-stacked batches, and KV caches
+  robust.py    tree-aware robust aggregation: per-leaf partial Gram
+               matrices (the (n, n) distance matrix is the only global
+               object), windowed coordinate phase, per-leaf attacks
+  train.py     the jit-able sharded Byzantine train step
+  serve.py     prefill/decode steps consumed by the dry-run and engine
+
+Everything is plain jit-compatible jnp: sharding enters exclusively via
+the input/output shardings (XLA GSPMD propagation), so the same step
+function runs unsharded on one device and sharded on a pod — which is
+exactly what ``tests/test_dist.py`` pins down.
+"""
+from repro.dist.mesh import (make_host_mesh, make_production_mesh,
+                             mesh_axis_sizes)
+from repro.dist.robust import (DistAggResult, coordinate_phase_nd,
+                               distributed_aggregate, inject_byzantine,
+                               pairwise_sq_dists_tree)
+from repro.dist.sharding import batch_pspec, cache_shardings, param_shardings
+from repro.dist.train import DistByzantineSpec, make_loss_fn, make_train_step
+from repro.dist.serve import make_prefill_step, make_serve_step
+
+__all__ = [
+    "DistAggResult", "DistByzantineSpec", "batch_pspec", "cache_shardings",
+    "coordinate_phase_nd", "distributed_aggregate", "inject_byzantine",
+    "make_host_mesh", "make_loss_fn", "make_prefill_step",
+    "make_production_mesh", "make_serve_step", "make_train_step",
+    "mesh_axis_sizes", "pairwise_sq_dists_tree", "param_shardings",
+]

@@ -1,0 +1,69 @@
+"""Device meshes.
+
+Importing this module never touches jax device state — meshes are built
+inside functions so the test suite's single-CPU processes stay single-CPU
+and the 512-device dry-run subprocess owns its own world.
+
+Axis convention (matches the sharding rules in ``repro.dist.sharding``):
+
+  data   Byzantine workers — one worker per ``data`` slice; robust
+         aggregation reduces over this axis
+  model  tensor parallelism within one worker's replica
+  pod    optional outermost axis (multi-pod dry-runs); used for extra
+         batch parallelism inside each worker
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+_DEFAULT_NAMES = ("data", "model")
+
+
+def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
+                   axis_names: Optional[Sequence[str]] = None):
+    """Mesh over the host's visible devices (CPU smoke / subprocess tests).
+
+    ``shape=None`` puts every device on the ``data`` axis with a trivial
+    ``model`` axis — the pure data-parallel layout.
+    """
+    import jax
+
+    devices = jax.devices()
+    if shape is None:
+        shape = (len(devices), 1)
+    if axis_names is None:
+        if len(shape) == 3:
+            axis_names = ("pod",) + _DEFAULT_NAMES
+        else:
+            axis_names = _DEFAULT_NAMES[:len(shape)]
+    if len(axis_names) != len(shape):
+        raise ValueError(f"{len(shape)}-d mesh needs {len(shape)} axis "
+                         f"names, got {axis_names!r}")
+    n = math.prod(shape)
+    if n > len(devices):
+        raise ValueError(
+            f"mesh shape {shape} needs {n} devices, have {len(devices)}")
+    arr = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(arr, tuple(axis_names))
+
+
+def make_production_mesh(multi_pod: bool = False):
+    """The assignment's production meshes.
+
+    single pod:  (16, 16)      ``("data", "model")``  — 256 chips
+    multi-pod:   (2, 16, 16)   ``("pod", "data", "model")`` — 512 chips
+
+    The dry-run process initializes 512 host placeholder devices; the
+    single-pod mesh uses the first 256 of them.
+    """
+    if multi_pod:
+        return make_host_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_host_mesh((16, 16), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    """{axis name: size} for a mesh."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,419 @@
+"""Tree-aware robust aggregation — the sharded path of every GAR.
+
+The core rules (``repro.core.gars``) consume a flat ``(n, d)`` matrix.
+Building that matrix at production scale means concatenating every
+parameter shard of every worker into one array — an all-gather of the
+full model per step.  This module keeps gradients as pytrees whose leaves
+carry a leading worker axis and exploits the structure of the rules:
+
+  * Distance-based selection (Krum, GeoMed, Bulyan phase 1) only needs
+    the (n, n) squared-distance matrix.  We accumulate it as a sum of
+    per-leaf partial Gram matrices (one tensordot per leaf over all
+    trailing dims) — under GSPMD each tensordot contracts the
+    model-sharded dims locally and the (n, n) result is all-reduced,
+    so the only globally materialized object is n x n.
+  * Coordinate-wise phases (cwmed, trimmed mean, Bulyan phase 2) are
+    embarrassingly parallel over coordinates and run per-leaf, preserving
+    each leaf's sharding.  ``coordinate_phase_nd`` additionally supports
+    windowing over the flattened trailing dims to bound the O(theta * d)
+    sort workspace.
+
+Accumulation dtype: the flat reference casts everything to fp32
+(``repro.core.pytree.stack_flatten``), so the default here is fp32 too —
+bf16 gradients are aggregated in fp32 and cast back.  ``agg_dtype=
+"bfloat16"`` is the perf experiment knob (halves distance-pass traffic).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bulyan as bulyan_lib
+from repro.core import gars
+
+
+class DistAggResult(NamedTuple):
+    """Per-worker diagnostics of one distributed aggregation (the
+    aggregate itself is returned as a pytree alongside)."""
+
+    selected: jnp.ndarray  # (n,) weights of each worker in the output
+    scores: jnp.ndarray    # (n,) rule scores (lower = better), or zeros
+
+
+def _leaves(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("empty gradient tree")
+    return leaves
+
+
+def _worker_count(tree) -> int:
+    leaves = _leaves(tree)
+    n = leaves[0].shape[0]
+    for leaf in leaves:
+        if leaf.ndim < 1 or leaf.shape[0] != n:
+            raise ValueError(
+                f"every leaf needs a leading worker axis of {n}, got "
+                f"shape {leaf.shape}")
+    return n
+
+
+def _compute_dtype(agg_dtype: str):
+    if agg_dtype == "bfloat16":
+        return jnp.bfloat16
+    if agg_dtype in ("native", "float32"):
+        return jnp.float32
+    raise ValueError(f"unknown agg_dtype {agg_dtype!r}")
+
+
+def _trailing_axes(leaf) -> Tuple[int, ...]:
+    return tuple(range(1, leaf.ndim))
+
+
+# ---------------------------------------------------------------------------
+# distances
+# ---------------------------------------------------------------------------
+
+def pairwise_sq_dists_tree(tree: Any, compute_dtype=jnp.float32
+                           ) -> jnp.ndarray:
+    """(n, n) squared euclidean distances over the *concatenation* of all
+    leaves, computed as a sum of per-leaf partial Gram matrices — no flat
+    (n, d) copy is ever built."""
+    n = _worker_count(tree)
+    gram = jnp.zeros((n, n), compute_dtype)
+    sq = jnp.zeros((n,), compute_dtype)
+    for leaf in _leaves(tree):
+        x = leaf.astype(compute_dtype)
+        axes = _trailing_axes(leaf)
+        gram = gram + jnp.tensordot(x, x, axes=(axes, axes))
+        sq = sq + jnp.sum(x * x, axis=axes)
+    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
+    d2 = jnp.maximum(d2, 0.0)
+    return d2 * (1.0 - jnp.eye(n, dtype=d2.dtype))
+
+
+# ---------------------------------------------------------------------------
+# coordinate phase over arbitrary trailing dims
+# ---------------------------------------------------------------------------
+
+def _phase_nd(selected: jnp.ndarray, f: int) -> jnp.ndarray:
+    """Bulyan phase 2 on a (theta, ...) stack, axis-0 vectorized over all
+    trailing dims.  Identical windowed algorithm to
+    ``repro.core.bulyan.coordinate_phase`` (see there for the contiguous-
+    window argument)."""
+    theta = selected.shape[0]
+    beta = theta - 2 * f
+    s = jnp.sort(selected, axis=0)
+    if beta == theta:
+        return jnp.mean(s, axis=0)
+    med = s[(theta - 1) // 2]
+    absdev = jnp.abs(s - med[None])
+    zeros = jnp.zeros_like(s[:1])
+    cd = jnp.concatenate([zeros, jnp.cumsum(absdev, axis=0)], axis=0)
+    cv = jnp.concatenate([zeros, jnp.cumsum(s, axis=0)], axis=0)
+    n_win = theta - beta + 1
+    win_dev = cd[beta:] - cd[:n_win]
+    win_sum = cv[beta:] - cv[:n_win]
+    w = jnp.argmin(win_dev, axis=0)
+    best = jnp.take_along_axis(win_sum, w[None], axis=0)[0]
+    return best / beta
+
+
+def coordinate_phase_nd(selected: jnp.ndarray, f: int,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """Bulyan's coordinate-wise phase on a (theta, *dims) stack -> (*dims).
+
+    ``window`` caps the number of coordinates processed at once (the sort
+    + two cumsums need O(theta * window) workspace); ``None`` processes
+    every coordinate in one shot, preserving the input's sharding.
+    """
+    theta = selected.shape[0]
+    beta = theta - 2 * f
+    if beta < 1:
+        raise ValueError(
+            f"beta = theta - 2f must be >= 1 (theta={theta}, f={f})")
+    trailing = selected.shape[1:]
+    d = math.prod(trailing)
+    if window is None or window <= 0 or d <= window:
+        return _phase_nd(selected, f)
+    flat = selected.reshape(theta, d)
+    chunks = [_phase_nd(flat[:, s:s + window], f)
+              for s in range(0, d, window)]
+    return jnp.concatenate(chunks, axis=0).reshape(trailing)
+
+
+# ---------------------------------------------------------------------------
+# the dispatcher
+# ---------------------------------------------------------------------------
+
+def _take_worker(leaves, i, cdt):
+    """Per-leaf row selection (traced index)."""
+    return [jnp.take(leaf, i, axis=0).astype(cdt) for leaf in leaves]
+
+
+def _weighted_sum(leaves, weights, cdt):
+    """Per-leaf <weights, workers> contraction — (n,) weights stay tiny
+    and replicated; each leaf contracts its own worker axis."""
+    return [jnp.tensordot(weights.astype(cdt), leaf.astype(cdt), axes=(0, 0))
+            for leaf in leaves]
+
+
+def _check_quorum(name: str, n: int, f: int) -> None:
+    if name.startswith("bulyan"):
+        base = name.split("-", 1)[1] if "-" in name else "krum"
+        # the distributed phase 1 works from distances alone
+        if base not in ("krum", "geomed"):
+            raise KeyError(
+                f"distributed bulyan needs a distance-only base "
+                f"(krum/geomed), got {name!r}")
+    elif name not in gars.REGISTRY:
+        raise KeyError(f"unknown GAR {name!r}; have {sorted(gars.REGISTRY)} "
+                       f"plus 'bulyan-<base>'")
+    need = gars.quorum(name, f)
+    if n < need:
+        raise ValueError(
+            f"{name} requires n >= {need} for f={f}, got n={n}")
+
+
+def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
+                          agg_dtype: str = "native",
+                          window: Optional[int] = None
+                          ) -> Tuple[Any, DistAggResult]:
+    """Apply GAR ``gar`` across the leading worker axis of a stacked
+    gradient pytree, leaf-wise (semantics contract: equals the flat core
+    rule on ``stack_flatten`` of the same tree, see tests/test_dist.py).
+
+    Returns ``(aggregated pytree, DistAggResult)``; the aggregate's leaves
+    keep their input dtypes.
+    """
+    n = _worker_count(tree)
+    _check_quorum(gar, n, f)
+    cdt = _compute_dtype(agg_dtype)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    out_dtypes = [leaf.dtype for leaf in leaves]
+    uniform = jnp.full((n,), 1.0 / n, cdt)
+    zeros_n = jnp.zeros((n,), cdt)
+    scores = zeros_n
+
+    if gar == "average":
+        agg = [jnp.mean(l.astype(cdt), axis=0) for l in leaves]
+        selected = uniform
+    elif gar == "cwmed":
+        agg = [jnp.median(l.astype(cdt), axis=0) for l in leaves]
+        selected = uniform
+    elif gar == "trimmed_mean":
+        agg = [jnp.mean(jnp.sort(l.astype(cdt), axis=0)[f:n - f], axis=0)
+               for l in leaves]
+        selected = uniform
+    elif gar in ("krum", "geomed", "multikrum"):
+        dist2 = pairwise_sq_dists_tree(tree, cdt)
+        mask = jnp.ones((n,), bool)
+        if gar == "geomed":
+            scores = gars.geomed_scores(dist2, mask)
+        else:
+            scores = gars.krum_scores(dist2, mask, f, n)
+        if gar == "multikrum":
+            m = max(1, n - f - 2)
+            _, top = jax.lax.top_k(-scores, m)
+            selected = jnp.zeros((n,), cdt).at[top].set(1.0 / m)
+            agg = _weighted_sum(leaves, selected, cdt)
+        else:
+            i = jnp.argmin(scores)
+            selected = jax.nn.one_hot(i, n, dtype=cdt)
+            agg = _take_worker(leaves, i, cdt)
+    elif gar == "brute":
+        dist2 = pairwise_sq_dists_tree(tree, cdt)
+        diam = gars.brute_subset_diameters(dist2, n, f)
+        idx = jnp.asarray(gars._subsets(n, n - f))
+        best = jnp.argmin(diam)
+        chosen = idx[best]
+        selected = jnp.zeros((n,), cdt).at[chosen].set(1.0 / (n - f))
+        agg = _weighted_sum(leaves, selected, cdt)
+        member = jnp.zeros((len(idx), n), bool).at[
+            jnp.arange(len(idx))[:, None], idx].set(True)
+        scores = jnp.min(jnp.where(member, diam[:, None], jnp.inf), axis=0)
+    elif gar == "centered_clip":
+        agg, selected = _centered_clip_tree(leaves, n, cdt)
+    elif gar.startswith("bulyan"):
+        base = gar.split("-", 1)[1] if "-" in gar else "krum"
+        dist2 = pairwise_sq_dists_tree(tree, cdt)
+        idx = bulyan_lib.select_indices_from_dists(dist2, f, base=base)
+        agg = [coordinate_phase_nd(
+            jnp.take(l.astype(cdt), idx, axis=0), f, window=window)
+            for l in leaves]
+        selected = jnp.zeros((n,), cdt).at[idx].set(1.0)
+    else:  # pragma: no cover — _check_quorum already rejected unknowns
+        raise KeyError(f"unsupported distributed GAR {gar!r}")
+
+    agg_tree = jax.tree_util.tree_unflatten(
+        treedef, [a.astype(dt) for a, dt in zip(agg, out_dtypes)])
+    return agg_tree, DistAggResult(selected, scores)
+
+
+def _centered_clip_tree(leaves, n: int, cdt, tau: float = 10.0,
+                        iters: int = 3):
+    """Tree-wise centered clipping: the per-worker deviation norm is the
+    *global* norm across leaves (matching the flat reference)."""
+    leaves = [l.astype(cdt) for l in leaves]  # once, not per iteration
+    v0 = tuple(jnp.mean(l, axis=0) for l in leaves)
+
+    def body(_, v):
+        deltas = [l - vi[None] for l, vi in zip(leaves, v)]
+        norm2 = jnp.zeros((n,), cdt)
+        for dlt in deltas:
+            norm2 = norm2 + jnp.sum(dlt * dlt, axis=_trailing_axes(dlt))
+        norm = jnp.sqrt(norm2)
+        scale = jnp.minimum(1.0, tau / jnp.maximum(norm, 1e-12))
+        return tuple(
+            vi + jnp.mean(dlt * scale.reshape((n,) + (1,) * (dlt.ndim - 1)),
+                          axis=0)
+            for vi, dlt in zip(v, deltas))
+
+    v = jax.lax.fori_loop(0, iters, body, v0)
+    return list(v), jnp.full((n,), 1.0 / n, cdt)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf Byzantine injection
+# ---------------------------------------------------------------------------
+
+def _tree_coord_count(leaves) -> int:
+    return sum(math.prod(l.shape[1:]) for l in leaves)
+
+
+def _tree_delta_bar(honest_leaves) -> jnp.ndarray:
+    """Paper §B.1 ``delta_bar`` over the concatenated coordinate space,
+    accumulated per leaf: 2/sqrt(pi) * mean over coordinates of the
+    per-coordinate std across honest workers."""
+    total = jnp.zeros((), jnp.float32)
+    count = 0
+    for leaf in honest_leaves:
+        x = leaf.astype(jnp.float32)
+        sd = jnp.std(x, axis=0)
+        total = total + jnp.sum(sd)
+        count += math.prod(leaf.shape[1:])
+    return 2.0 / jnp.sqrt(jnp.pi) * total / max(count, 1)
+
+
+def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
+                     gar_name: str = "krum", step=None, gamma=None,
+                     scale: Optional[float] = None, eps: float = 0.5,
+                     z: Optional[float] = None, target: int = 0,
+                     coord=0, margin: float = 1.0) -> Any:
+    """Replace the last ``f`` worker rows of every leaf with Byzantine
+    submissions computed from the first ``n - f`` (honest) rows.
+
+    All attacks run per-leaf — coordinate-wise attacks (signflip, alie,
+    ipm, zero, mimic, random) are exactly their flat counterparts; the
+    omniscient attacks use the paper's §B *closed-form* gamma (the exact
+    in-graph bisection of ``repro.core.attacks`` needs the full rule — and
+    hence the flat matrix — inside the search loop, so the distributed
+    runtime uses the estimate the paper itself used).
+    """
+    if f <= 0 or attack == "none":
+        return tree
+    n = _worker_count(tree)
+    n_h = n - f
+    if n_h < 1:
+        raise ValueError(f"need at least one honest worker (n={n}, f={f})")
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    honest = [l[:n_h] for l in leaves]
+
+    def _broadcast(byz_one, leaf):
+        """(…) per-leaf Byzantine value -> f stacked rows, leaf dtype."""
+        return jnp.broadcast_to(byz_one[None], (f,) + leaf.shape[1:]
+                                ).astype(leaf.dtype)
+
+    if attack == "signflip":
+        s = 1.0 if scale is None else scale
+        byz = [_broadcast(-s * jnp.mean(h.astype(jnp.float32), axis=0),
+                          l) for h, l in zip(honest, leaves)]
+    elif attack == "zero":
+        byz = [jnp.zeros((f,) + l.shape[1:], l.dtype) for l in leaves]
+    elif attack == "mimic":
+        byz = [_broadcast(h[target], l) for h, l in zip(honest, leaves)]
+    elif attack == "ipm":
+        byz = [_broadcast(-eps * jnp.mean(h.astype(jnp.float32), axis=0), l)
+               for h, l in zip(honest, leaves)]
+    elif attack == "random":
+        s = 10.0 if scale is None else scale  # core.random_noise default
+        byz = [s * jax.random.normal(jax.random.fold_in(key, j),
+                                     (f,) + l.shape[1:], l.dtype)
+               for j, l in enumerate(leaves)]
+    elif attack == "alie":
+        if z is None:
+            s = (n // 2) + 1 - f
+            phi = max(min((n - f - s) / float(n - f), 1.0 - 1e-6), 1e-6)
+            z = float(jax.scipy.special.ndtri(phi))
+        byz = [_broadcast(jnp.mean(h.astype(jnp.float32), axis=0)
+                          - z * jnp.std(h.astype(jnp.float32), axis=0), l)
+               for h, l in zip(honest, leaves)]
+    elif attack in ("omniscient_linf", "omniscient_lp"):
+        d = _tree_coord_count(leaves)
+        db = _tree_delta_bar(honest)
+        means = [jnp.mean(h.astype(jnp.float32), axis=0) for h in honest]
+        # gamma None and "closed" both mean the §B closed form here (the
+        # exact bisection only exists on the flat path); margin applies to
+        # the estimate only — an explicit gamma is used verbatim
+        estimated = gamma is None or gamma == "closed"
+        if attack == "omniscient_linf":
+            # per-coordinate leeway ~ delta_bar (§3.3: poisoning every
+            # coordinate forfeits the sqrt(d) amplification)
+            g = (db * margin if estimated
+                 else jnp.asarray(gamma, jnp.float32))
+            byz = [_broadcast(m + g, l) for m, l in zip(means, leaves)]
+        else:
+            # §3.2: one coordinate, gamma_m ~ d^{1/p} closed form (§B).
+            # ``coord`` indexes the concatenated coordinate space of the
+            # whole tree (same convention as the flat reference).
+            from repro.core.attacks import _closed_gamma
+            g = (_closed_gamma(gar_name, d, f, db) * margin if estimated
+                 else jnp.asarray(gamma, jnp.float32))
+            sign = jnp.asarray(1.0, jnp.float32)
+            if coord == "rotate":
+                c = (jnp.asarray(step, jnp.int32) if step is not None
+                     else jnp.zeros((), jnp.int32)) % d
+            elif coord == "top":
+                # coordinate where the honest mean is largest in
+                # magnitude, attacked against its sign
+                sizes = [math.prod(l.shape[1:]) for l in leaves]
+                offs_py = [0]
+                for s_ in sizes[:-1]:
+                    offs_py.append(offs_py[-1] + s_)
+                maxes = jnp.stack([jnp.max(jnp.abs(m)) for m in means])
+                arg = jnp.stack([jnp.argmax(jnp.abs(m.reshape(-1)))
+                                 for m in means])
+                vals = jnp.stack([m.reshape(-1)[a]
+                                  for m, a in zip(means, arg)])
+                j = jnp.argmax(maxes)
+                c = (jnp.asarray(offs_py, jnp.int32)[j]
+                     + arg[j].astype(jnp.int32))
+                sign = -jnp.sign(vals[j])
+            else:
+                if isinstance(coord, int) and not 0 <= coord < d:
+                    raise ValueError(
+                        f"coord must be in [0, {d}), 'rotate' or 'top'; "
+                        f"got {coord!r}")
+                c = jnp.asarray(coord, jnp.int32)
+            off = 0
+            byz = []
+            for m, l in zip(means, leaves):
+                sz = math.prod(l.shape[1:])
+                local = c - off
+                hit = (local >= 0) & (local < sz)
+                e = jnp.zeros((sz,), jnp.float32).at[
+                    jnp.clip(local, 0, sz - 1)].set(
+                        jnp.where(hit, sign, 0.0)).reshape(l.shape[1:])
+                byz.append(_broadcast(m + g * e, l))
+                off += sz
+    else:
+        raise KeyError(f"unknown distributed attack {attack!r}")
+
+    out = [jnp.concatenate([l[:n_h], b], axis=0)
+           for l, b in zip(leaves, byz)]
+    return jax.tree_util.tree_unflatten(treedef, out)

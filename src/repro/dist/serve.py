@@ -1,0 +1,38 @@
+"""Serving steps for the dry-run and the serving engine.
+
+Thin, jit-able closures over the model's prefill/decode paths — the
+sharded layout comes from ``repro.dist.sharding`` (params over ``model``,
+batch and KV caches over the data-parallel axes), applied by the caller
+via input/output shardings exactly as in ``repro.launch.dryrun``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, impl: str = "auto") -> Callable:
+    """``step(params, tokens[, extra]) -> (logits, cache)`` — full-sequence
+    forward that also populates decode caches (cache_len = seq_len)."""
+
+    def prefill_step(params, tokens: jnp.ndarray,
+                     extra: Optional[jnp.ndarray] = None):
+        return prefill(params, cfg, tokens, extra=extra, impl=impl)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    """``step(params, cache, token, pos) -> (logits, new_cache)`` — one
+    decode token for every sequence in the batch; ``pos`` is a scalar or
+    (B,) per-slot position vector (continuous batching).  Single-token
+    decode has no attention-impl choice, hence no ``impl`` knob."""
+
+    def serve_step(params, cache, token: jnp.ndarray, pos):
+        return decode_step(params, cfg, cache, token, pos)
+
+    return serve_step

@@ -1,0 +1,134 @@
+"""Sharding rules: pytrees -> NamedSharding / PartitionSpec.
+
+Rules are deliberately structural (shape + tree path), not per-arch
+tables: every assigned architecture's parameter tree flows through the
+same three functions.  A dimension is only ever sharded when it divides
+evenly by the mesh axis — anything else is replicated, which is always
+correct and lets the reduced CPU configs reuse the production rules.
+
+``LEGACY_RULES`` is the pre-iteration baseline (shard the last dim only)
+kept for A/B dry-run comparisons (``repro.launch.dryrun
+--legacy-sharding``).
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist.mesh import mesh_axis_sizes
+
+#: pre-iteration parameter rules (A/B baseline; see launch.dryrun)
+LEGACY_RULES = False
+
+
+def _path_keys(path) -> Tuple[str, ...]:
+    return tuple(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _leaf_pspec(path, shape: Sequence[int], model: int) -> P:
+    """Parameter rule: shard one dimension over ``model``.
+
+    The largest evenly-divisible dimension wins (ties -> the later dim, so
+    square projections shard their output side).  Scalars, vectors (norm
+    gains, biases) and anything indivisible stay replicated.  The leading
+    stacked-period axis of scanned layer parameters is never sharded —
+    ``lax.scan`` unstacks along it every step.
+    """
+    if model <= 1 or len(shape) < 2:
+        return P()
+    if LEGACY_RULES:
+        if shape[-1] % model == 0 and shape[-1] >= model:
+            return P(*([None] * (len(shape) - 1) + ["model"]))
+        return P()
+    in_periods = "periods" in _path_keys(path)
+    order = sorted(range(len(shape)), key=lambda i: (-shape[i], -i))
+    for i in order:
+        if in_periods and i == 0:
+            continue
+        if shape[i] >= model and shape[i] % model == 0:
+            spec = [None] * len(shape)
+            spec[i] = "model"
+            return P(*spec)
+    return P()
+
+
+def param_shardings(tree: Any, mesh) -> Any:
+    """NamedSharding pytree for parameters / optimizer state.
+
+    Parameters are replicated across ``data`` (each Byzantine worker holds
+    a full replica — the paper's protocol) and tensor-sharded across
+    ``model``.  Optimizer state mirrors its parameter's layout because it
+    has the parameter's shape; scalar state (step counters) replicates.
+    """
+    model = mesh_axis_sizes(mesh).get("model", 1)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, _leaf_pspec(path, leaf.shape, model)), tree)
+
+
+def _first_fit(dim: int, sizes, options) -> Any:
+    """First axis combo (in preference order) that evenly divides ``dim``."""
+    for axes in options:
+        if not all(a in sizes for a in axes):
+            continue
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        if prod > 1 and dim % prod == 0:
+            return axes[0] if len(axes) == 1 else tuple(axes)
+    return None
+
+
+def batch_pspec(shape: Sequence[int], mesh, worker_axis: bool = True) -> P:
+    """PartitionSpec for model inputs.
+
+    worker_axis=True   (n_workers, per_worker, ...): the worker axis maps
+                       onto ``data`` (one worker per data slice); the
+                       per-worker batch additionally splits over ``pod``
+                       when present.
+    worker_axis=False  (batch, ...): serving inputs — batch spreads over
+                       every data-parallel axis that divides it.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    if not shape:
+        return P()
+    spec = [None] * len(shape)
+    if worker_axis:
+        spec[0] = _first_fit(shape[0], sizes, [("data",)])
+        if len(shape) > 1:
+            spec[1] = _first_fit(shape[1], sizes, [("pod",)])
+    else:
+        spec[0] = _first_fit(shape[0], sizes,
+                             [("pod", "data"), ("data",), ("pod",)])
+    while spec and spec[-1] is None:
+        spec.pop()
+    return P(*spec)
+
+
+def cache_shardings(cache: Any, mesh) -> Any:
+    """NamedSharding pytree for decode caches.
+
+    Cache structure (see ``repro.models.decode.init_cache``): ``periods``
+    leaves are period-stacked ``(n_periods, B, ...)``; ``tail`` leaves are
+    ``(B, ...)``.  The batch axis shards over the data-parallel axes; the
+    rest follows the activations (replicated over ``model`` — KV heads are
+    usually too few to split a 16-way axis).
+    """
+    sizes = mesh_axis_sizes(mesh)
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        batch_dim = 1 if "periods" in keys else 0
+        shape = leaf.shape
+        if len(shape) <= batch_dim:
+            return NamedSharding(mesh, P())
+        spec = [None] * len(shape)
+        spec[batch_dim] = _first_fit(shape[batch_dim], sizes,
+                                     [("pod", "data"), ("data",), ("pod",)])
+        while spec and spec[-1] is None:
+            spec.pop()
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)

@@ -1,0 +1,134 @@
+"""The sharded Byzantine train step.
+
+One jit-able function runs the paper's full protocol: per-worker
+forward/backward (vmap over the leading worker axis of the batch),
+in-graph Byzantine injection on the stacked gradient tree, tree-aware
+robust aggregation, optimizer update.  Sharding enters only through the
+input/output shardings — the identical step function executes unsharded
+on a single device (the semantics reference of ``tests/test_dist.py``)
+and GSPMD-partitioned on a pod: the worker axis lives on ``data``, the
+parameters on ``model``, and the per-leaf Gram contractions of
+``repro.dist.robust`` become local partial products plus an (n, n)
+all-reduce.
+
+The single-host flat-matrix reference lives in ``repro.training.trainer``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.robust import distributed_aggregate, inject_byzantine
+from repro.models import forward
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class DistByzantineSpec:
+    """Static configuration of the distributed Byzantine protocol.
+
+    ``f`` is both the number of injected Byzantine workers and the bound
+    the aggregation rule defends against (``declared_f`` overrides the
+    latter).  The worker count is taken from the batch's leading axis at
+    trace time; the quorum check runs then.
+    """
+
+    f: int
+    gar: str = "bulyan-krum"
+    attack: str = "none"
+    attack_kwargs: tuple = ()          # (("gamma", 10.0), ...)
+    agg_dtype: str = "native"          # native | float32 | bfloat16
+    declared_f: Optional[int] = None
+    seed: int = 0
+
+    @property
+    def f_declared(self) -> int:
+        return self.declared_f if self.declared_f is not None else self.f
+
+    def validate(self, n_workers: int) -> None:
+        from repro.dist.robust import _check_quorum
+        _check_quorum(self.gar, n_workers, self.f_declared)
+
+
+def make_loss_fn(cfg: ModelConfig, impl: str = "auto") -> Callable:
+    """Token-level cross-entropy (fp32 logsumexp) plus the model's aux
+    loss (MoE load balancing).  ``loss_fn(params, tokens, labels, extra)``.
+    """
+
+    def loss_fn(params, tokens, labels, extra=None):
+        logits, aux = forward(params, cfg, tokens, extra, impl=impl)
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(logz - ll) + aux
+
+    return loss_fn
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    total = jnp.zeros((), jnp.float32)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        x = leaf.astype(jnp.float32)
+        total = total + jnp.sum(x * x)
+    return jnp.sqrt(total)
+
+
+def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
+                    optimizer: Optimizer, impl: str = "auto") -> Callable:
+    """Build ``step(params, opt_state, batch) -> (params, opt_state,
+    metrics)``.
+
+    batch: ``{"tokens", "labels"[, "extra"]}`` with a leading worker axis
+    ``(n_workers, per_worker_batch, ...)`` on every entry.  All n workers
+    compute real gradients; when an attack is configured the last ``f``
+    are overwritten in-graph by the omniscient adversary (it reads the
+    honest gradients first, per the paper's threat model).
+    """
+    loss_fn = make_loss_fn(cfg, impl)
+    vg = jax.value_and_grad(loss_fn)
+
+    def step(params, opt_state, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        extra = batch.get("extra")
+        n = tokens.shape[0]
+        spec.validate(n)
+        f = spec.f
+        n_h = n - f
+
+        if extra is None:
+            losses, grads = jax.vmap(
+                lambda t, l: vg(params, t, l))(tokens, labels)
+        else:
+            losses, grads = jax.vmap(
+                lambda t, l, e: vg(params, t, l, e))(tokens, labels, extra)
+
+        if spec.attack != "none" and f > 0:
+            key = jax.random.fold_in(jax.random.PRNGKey(spec.seed),
+                                     opt_state["step"])
+            akw = dict(spec.attack_kwargs)
+            akw.setdefault("gar_name", spec.gar)
+            grads = inject_byzantine(grads, f, spec.attack, key=key,
+                                     step=opt_state["step"], **akw)
+
+        agg, res = distributed_aggregate(grads, spec.f_declared, spec.gar,
+                                         agg_dtype=spec.agg_dtype)
+        new_params, new_state = optimizer.update(agg, opt_state, params)
+
+        honest_mean = jax.tree_util.tree_map(
+            lambda g: jnp.mean(g[:n_h].astype(jnp.float32), axis=0), grads)
+        dev = jax.tree_util.tree_map(
+            lambda a, m: a.astype(jnp.float32) - m, agg, honest_mean)
+        metrics = {
+            "loss": jnp.mean(losses[:n_h]),
+            "grad_norm": _global_norm(agg),
+            "agg_dev": _global_norm(dev),
+            "byz_weight": (jnp.sum(res.selected[n_h:]) if f > 0
+                           else jnp.zeros((), jnp.float32)),
+        }
+        return new_params, new_state, metrics
+
+    return step

@@ -45,8 +45,9 @@ class TestDistributedAggregateSemantics:
                                    rtol=1e-4, atol=1e-4)
 
     @pytest.mark.parametrize("gar", ["average", "cwmed", "trimmed_mean",
-                                     "krum", "geomed", "bulyan-krum",
-                                     "bulyan-geomed"])
+                                     "krum", "geomed", "multikrum",
+                                     "brute", "centered_clip",
+                                     "bulyan-krum", "bulyan-geomed"])
     def test_matches_core_gar(self, gar):
         n, f = 11, 2
         tree = _stacked_tree(n)
@@ -68,8 +69,14 @@ class TestDistributedAggregateSemantics:
         n, f = 11, 3
         tree = _stacked_tree(n)
         out = inject_byzantine(tree, f, "signflip")
+        # structure must be preserved exactly: same top-level names, same
+        # per-leaf shapes and dtypes
+        assert isinstance(out, dict) and set(out) == set(tree)
         for name in ("a", "b", "c"):
-            pass
+            for a, o in zip(jax.tree_util.tree_leaves(tree[name]),
+                            jax.tree_util.tree_leaves(out[name])):
+                assert a.shape == o.shape
+                assert a.dtype == o.dtype
         la = jax.tree_util.tree_leaves(tree)
         lo = jax.tree_util.tree_leaves(out)
         for a, o in zip(la, lo):

@@ -13,6 +13,9 @@ Key invariants from the paper:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import get_gar, select_indices
