@@ -92,5 +92,10 @@ def run_experiment(*, kind: str, gar: str, attack: str, n_honest: int,
     }
 
 
-def emit(name: str, us: float, derived: str) -> None:
-    print(f"{name},{us:.0f},{derived}", flush=True)
+def emit(name: str, us: float, derived: str, backend: str = "-") -> None:
+    """One CSV row: ``name,backend,us_per_call,derived``.
+
+    ``backend`` tags rows produced under a specific distance backend
+    (``xla`` / ``pallas``); ``"-"`` marks backend-independent rows.
+    """
+    print(f"{name},{backend},{us:.0f},{derived}", flush=True)

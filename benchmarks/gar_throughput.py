@@ -84,15 +84,52 @@ def main_dist(ds=(100_000, 1_000_000), ns=(15, 39)) -> None:
             for name in ("krum", "bulyan-krum", "trimmed_mean"):
                 gar = get_gar(name)
                 flat_fn = jax.jit(lambda x, gar=gar: gar(x, f).gradient)
+                # pin xla: these rows measure the tree *decomposition*
+                # cost, which must stay backend-stable across hosts
+                # (main_backends owns the xla-vs-pallas comparison)
                 tree_fn = jax.jit(
                     lambda t, name=name: distributed_aggregate(
-                        t, f, name)[0])
+                        t, f, name, distance_backend="xla")[0])
                 us_flat = _time(flat_fn, flat)
                 us_tree = _time(tree_fn, tree)
                 emit(f"gar_throughput/dist_{name}_n{n}_d{d}", us_tree,
                      f"flat_us={us_flat:.0f};ratio={us_tree / us_flat:.2f}")
 
 
+def main_backends(ds=(100_000, 1_000_000), ns=(15, 39)) -> None:
+    """xla vs pallas distance backend on the same stacked trees, plus the
+    sharded-style tree vs the flat (n, d) matrix per backend.
+
+    Off-TPU the Pallas rows run through the interpreter (the parity
+    check, not a perf number — interpret mode is pure-Python per grid
+    step); on TPU they are the compiled-kernel measurement.  The
+    ``dist_vs_flat`` ratio shows what the tree decomposition costs over
+    one flat matmul at each d.
+    """
+    key = jax.random.PRNGKey(2)
+    on_tpu = jax.default_backend() == "tpu"
+    for n in ns:
+        f = (n - 3) // 4
+        for d in ds:
+            tree = _stacked_tree(key, n, d)
+            flat, _ = pt.stack_flatten(tree)
+            flat_gar = get_gar("krum")
+            us_flat = _time(jax.jit(lambda x: flat_gar(x, f).gradient),
+                            flat)
+            for backend in ("xla", "pallas"):
+                if backend == "pallas" and not on_tpu and d > ds[0]:
+                    emit(f"gar_throughput/backend_krum_n{n}_d{d}", 0,
+                         "skipped=interpret-mode-cpu", backend)
+                    continue
+                fn = jax.jit(lambda t, b=backend: distributed_aggregate(
+                    t, f, "krum", distance_backend=b)[0])
+                us = _time(fn, tree)
+                emit(f"gar_throughput/backend_krum_n{n}_d{d}", us,
+                     f"flat_us={us_flat:.0f};"
+                     f"dist_vs_flat={us / us_flat:.2f}", backend)
+
+
 if __name__ == "__main__":
     main()
     main_dist()
+    main_backends()

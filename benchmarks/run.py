@@ -1,5 +1,7 @@
 """Benchmark harness: one module per paper table/figure plus the systems
-benches.  Prints ``name,us_per_call,derived`` CSV rows.
+benches.  Prints ``name,backend,us_per_call,derived`` CSV rows — the
+``backend`` column tags distance-backend comparison rows (xla/pallas);
+``-`` marks backend-independent benches.
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only NAME]
 """
@@ -31,13 +33,14 @@ def main() -> None:
         ("leeway", lambda: leeway_scaling.main()),
         ("gar_throughput", lambda: gar_throughput.main()),
         ("gar_throughput_dist", lambda: gar_throughput.main_dist()),
+        ("gar_backends", lambda: gar_throughput.main_backends()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
         ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),
         ("fig45", lambda: fig45_bulyan_defense.main(steps=steps45)),
         ("fig6", lambda: fig6_bulyan_cost.main(steps=steps6)),
         ("roofline", lambda: roofline.main()),
     ]
-    print("name,us_per_call,derived")
+    print("name,backend,us_per_call,derived")
     for name, fn in benches:
         if args.only and args.only != name:
             continue
@@ -45,8 +48,8 @@ def main() -> None:
         try:
             fn()
         except Exception as e:  # keep the harness going
-            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
-        print(f"{name}/total,{1e6 * (time.time() - t0):.0f},done",
+            print(f"{name}/ERROR,-,0,{type(e).__name__}:{e}", flush=True)
+        print(f"{name}/total,-,{1e6 * (time.time() - t0):.0f},done",
               flush=True)
 
 

@@ -1,0 +1,93 @@
+"""Docs lint: keep README.md / docs/*.md honest.
+
+Three checks over every markdown file given (default: README.md and
+docs/**/*.md from the repo root):
+
+  1. every fenced ``python`` code block must *compile* (syntax);
+  2. every ``from repro... import X`` / ``import repro...`` line inside a
+     python block must resolve against the installed tree (so renames
+     break the docs loudly);
+  3. every repo-relative path mentioned in the text (src/..., docs/...,
+     examples/..., benchmarks/..., tests/..., scripts/...) must exist.
+
+Exit status is the number of failures; run from CI as
+``PYTHONPATH=src python scripts/docs_lint.py``.
+"""
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+from typing import Iterable, List, Tuple
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+_FENCE_RE = re.compile(r"```(\w+)?\n(.*?)```", re.DOTALL)
+_IMPORT_RE = re.compile(
+    r"^\s*(?:from\s+(repro[\w.]*)\s+import\s+(\([^)]*\)|[\w, ]+)"
+    r"|import\s+(repro[\w.]*))", re.MULTILINE)
+_PATH_RE = re.compile(
+    r"\b((?:src|docs|examples|benchmarks|tests|scripts)/[\w./-]+\.\w+)")
+
+
+def code_blocks(text: str) -> Iterable[Tuple[str, str]]:
+    """Yield ``(language, body)`` for every fenced block."""
+    for m in _FENCE_RE.finditer(text):
+        yield (m.group(1) or "", m.group(2))
+
+
+def lint_file(path: pathlib.Path) -> List[str]:
+    """All failures for one markdown file, as printable strings."""
+    errors: List[str] = []
+    text = path.read_text()
+    try:
+        rel = path.relative_to(REPO)
+    except ValueError:  # explicit argument outside the repo root
+        rel = path
+
+    for lang, body in code_blocks(text):
+        if lang != "python":
+            continue
+        try:
+            compile(body, str(rel), "exec")
+        except SyntaxError as e:
+            errors.append(f"{rel}: python block does not compile: {e}")
+            continue
+        for m in _IMPORT_RE.finditer(body):
+            module = m.group(1) or m.group(3)
+            try:
+                mod = importlib.import_module(module)
+            except Exception as e:
+                errors.append(f"{rel}: import {module} failed: {e}")
+                continue
+            for name in (m.group(2) or "").strip("()").split(","):
+                name = name.strip()
+                if name and not hasattr(mod, name):
+                    errors.append(
+                        f"{rel}: {module} has no symbol {name!r}")
+
+    for m in _PATH_RE.finditer(text):
+        target = REPO / m.group(1)
+        if not target.exists():
+            errors.append(f"{rel}: referenced path {m.group(1)} missing")
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    files = [(REPO / a).resolve() for a in argv] or (
+        [REPO / "README.md"] + sorted((REPO / "docs").glob("**/*.md")))
+    failures: List[str] = []
+    for f in files:
+        if not f.exists():
+            failures.append(f"{f}: file missing")
+            continue
+        failures.extend(lint_file(f))
+    for line in failures:
+        print(f"docs-lint: {line}", file=sys.stderr)
+    print(f"docs-lint: {len(files)} files, {len(failures)} failures")
+    return len(failures)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -10,28 +10,35 @@ production path:
                state, worker-stacked batches, and KV caches
   robust.py    tree-aware robust aggregation: per-leaf partial Gram
                matrices (the (n, n) distance matrix is the only global
-               object), windowed coordinate phase, per-leaf attacks
+               object), the distance_backend= xla/pallas/auto dispatch
+               (shard-mapped Pallas kernel on the sharded path),
+               windowed coordinate phase, per-leaf attacks
   train.py     the jit-able sharded Byzantine train step
   serve.py     prefill/decode steps consumed by the dry-run and engine
 
 Everything is plain jit-compatible jnp: sharding enters exclusively via
 the input/output shardings (XLA GSPMD propagation), so the same step
 function runs unsharded on one device and sharded on a pod — which is
-exactly what ``tests/test_dist.py`` pins down.
+exactly what ``tests/test_dist.py`` pins down.  The one deliberate
+exception is the Pallas distance backend, whose ``shard_map`` block pins
+the kernel's layout explicitly; see docs/dist-runtime.md.
 """
 from repro.dist.mesh import (make_host_mesh, make_production_mesh,
                              mesh_axis_sizes)
 from repro.dist.robust import (DistAggResult, coordinate_phase_nd,
                                distributed_aggregate, inject_byzantine,
-                               pairwise_sq_dists_tree)
-from repro.dist.sharding import batch_pspec, cache_shardings, param_shardings
+                               pairwise_sq_dists_tree,
+                               resolve_distance_backend)
+from repro.dist.sharding import (batch_pspec, cache_shardings, gram_pspec,
+                                 param_shardings)
 from repro.dist.train import DistByzantineSpec, make_loss_fn, make_train_step
 from repro.dist.serve import make_prefill_step, make_serve_step
 
 __all__ = [
     "DistAggResult", "DistByzantineSpec", "batch_pspec", "cache_shardings",
-    "coordinate_phase_nd", "distributed_aggregate", "inject_byzantine",
-    "make_host_mesh", "make_loss_fn", "make_prefill_step",
-    "make_production_mesh", "make_serve_step", "make_train_step",
-    "mesh_axis_sizes", "pairwise_sq_dists_tree", "param_shardings",
+    "coordinate_phase_nd", "distributed_aggregate", "gram_pspec",
+    "inject_byzantine", "make_host_mesh", "make_loss_fn",
+    "make_prefill_step", "make_production_mesh", "make_serve_step",
+    "make_train_step", "mesh_axis_sizes", "pairwise_sq_dists_tree",
+    "param_shardings", "resolve_distance_backend",
 ]

@@ -19,6 +19,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+__all__ = ["make_host_mesh", "make_production_mesh", "mesh_axis_sizes"]
+
 _DEFAULT_NAMES = ("data", "model")
 
 
@@ -26,8 +28,15 @@ def make_host_mesh(shape: Optional[Tuple[int, ...]] = None,
                    axis_names: Optional[Sequence[str]] = None):
     """Mesh over the host's visible devices (CPU smoke / subprocess tests).
 
-    ``shape=None`` puts every device on the ``data`` axis with a trivial
-    ``model`` axis — the pure data-parallel layout.
+    Args:
+      shape: device-grid shape, e.g. ``(4, 2)``; ``None`` puts every
+        device on the ``data`` axis with a trivial ``model`` axis — the
+        pure data-parallel layout.
+      axis_names: one name per mesh dim; defaults to ``("data", "model")``
+        (2-d) or ``("pod", "data", "model")`` (3-d).
+
+    Returns:
+      ``jax.sharding.Mesh`` over the first ``prod(shape)`` host devices.
     """
     import jax
 
@@ -65,5 +74,12 @@ def make_production_mesh(multi_pod: bool = False):
 
 
 def mesh_axis_sizes(mesh) -> Dict[str, int]:
-    """{axis name: size} for a mesh."""
+    """Axis-name -> size mapping of a mesh.
+
+    Args:
+      mesh: a ``jax.sharding.Mesh``.
+
+    Returns:
+      ``{axis name: size}``, e.g. ``{"data": 16, "model": 16}``.
+    """
     return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -21,7 +21,28 @@ carry a leading worker axis and exploits the structure of the rules:
 Accumulation dtype: the flat reference casts everything to fp32
 (``repro.core.pytree.stack_flatten``), so the default here is fp32 too —
 bf16 gradients are aggregated in fp32 and cast back.  ``agg_dtype=
-"bfloat16"`` is the perf experiment knob (halves distance-pass traffic).
+"bfloat16"`` is the perf experiment knob (halves distance-pass traffic
+on the XLA backend; the Pallas kernel streams the input dtype from HBM
+but always *accumulates* fp32 on-chip, so there the knob only thins the
+HBM stream and the two backends can differ at bf16 beyond the fp32
+parity bound).
+
+Distance backend: the (n, n) matrix is the hot path of every
+distance-based GAR, and it has two interchangeable implementations behind
+``distance_backend=``:
+
+  "xla"     per-leaf ``jnp.tensordot`` partial Grams (GSPMD shards the
+            contraction implicitly) — works everywhere, the semantics
+            reference;
+  "pallas"  the VMEM-tiled MXU kernel ``repro.kernels.pairwise_gram``.
+            With a ``mesh``, each model shard runs the kernel on its local
+            d-slice under ``shard_map`` and only the (n, n) partials are
+            psum'd — same "no flat (n, d) matrix" invariant, explicit
+            tiling.  Falls back to the Pallas interpreter off-TPU so CPU
+            CI exercises the identical code path;
+  "auto"    "pallas" on TPU when a mesh with a non-trivial model axis is
+            threaded through; "xla" everywhere else (see
+            ``resolve_distance_backend`` for why the mesh is required).
 """
 from __future__ import annotations
 
@@ -30,9 +51,17 @@ from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.core import bulyan as bulyan_lib
 from repro.core import gars
+from repro.kernels.pairwise_gram import (finalize_dists,
+                                         pairwise_gram_partial,
+                                         pairwise_gram_tree)
+
+__all__ = ["DistAggResult", "coordinate_phase_nd", "distributed_aggregate",
+           "inject_byzantine", "pairwise_sq_dists_tree",
+           "resolve_distance_backend"]
 
 
 class DistAggResult(NamedTuple):
@@ -77,12 +106,123 @@ def _trailing_axes(leaf) -> Tuple[int, ...]:
 # distances
 # ---------------------------------------------------------------------------
 
-def pairwise_sq_dists_tree(tree: Any, compute_dtype=jnp.float32
-                           ) -> jnp.ndarray:
-    """(n, n) squared euclidean distances over the *concatenation* of all
-    leaves, computed as a sum of per-leaf partial Gram matrices — no flat
-    (n, d) copy is ever built."""
+def resolve_distance_backend(distance_backend: str, mesh=None) -> str:
+    """Resolve the user-facing backend knob to a concrete implementation.
+
+    Args:
+      distance_backend: ``"xla"`` | ``"pallas"`` | ``"auto"``.
+      mesh: the mesh that would drive the shard-mapped Pallas pass
+        (``None`` when the caller did not thread one through).
+
+    Returns:
+      ``"xla"`` or ``"pallas"``.  ``"auto"`` picks the Pallas kernel
+      only on TPU *and* with a mesh whose ``model`` axis is non-trivial:
+      without the mesh the kernel would run as a plain ``pallas_call``
+      inside the GSPMD program, and XLA has no partitioning rule for it
+      — it would all-gather every model-sharded gradient leaf, exactly
+      the flat materialization this module forbids.  Off-TPU the clean
+      fallback is XLA (interpret mode is pure-Python per grid step).
+      An explicit ``"pallas"`` is honored as given — opting in without a
+      mesh is the single-device/debug path.
+    """
+    if distance_backend == "auto":
+        if jax.default_backend() != "tpu":
+            return "xla"
+        from repro.dist.mesh import mesh_axis_sizes
+        has_model = (mesh is not None
+                     and mesh_axis_sizes(mesh).get("model", 1) > 1)
+        return "pallas" if has_model else "xla"
+    if distance_backend not in ("xla", "pallas"):
+        raise ValueError(
+            f"distance_backend must be 'xla', 'pallas' or 'auto', got "
+            f"{distance_backend!r}")
+    return distance_backend
+
+
+def _pallas_sharded_dists(tree: Any, mesh, *, block_d: int,
+                          interpret: Optional[bool]) -> jnp.ndarray:
+    """Shard-mapped Pallas distance pass: each model shard runs the tiled
+    kernel on its local d-slice of every leaf, then the (n, n) raw
+    partials are psum'd over ``model``.  Worker rows are replicated into
+    each shard (an (n, d/model) gather — the same traffic GSPMD's
+    implicit sharding of the tensordot path pays), so shards differing
+    only in their data/pod coordinate compute identical results and the
+    output is replicated.
+
+    Leaves too small/ragged to divide by the model axis enter fully
+    replicated (``gram_pspec`` gives them ``P()``): every shard computes
+    their whole partial, so those partials must stay *out* of the psum —
+    summing them post-reduction instead of multiplying them by the axis
+    size."""
+    from jax.experimental.shard_map import shard_map
+
+    from repro.dist.sharding import gram_pspec
+
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    if not flat:
+        raise ValueError("empty gradient tree")
+    leaves = [leaf for _, leaf in flat]
+    in_specs = tuple(gram_pspec(leaf.shape, mesh, path)
+                     for path, leaf in flat)
+    is_sharded = tuple("model" in spec for spec in in_specs)
+
+    def local_partials(*local_leaves):
+        n = local_leaves[0].shape[0]
+        sharded = jnp.zeros((n, n), jnp.float32)
+        replicated = jnp.zeros((n, n), jnp.float32)
+        for leaf, shd in zip(local_leaves, is_sharded):
+            part = pairwise_gram_partial(
+                leaf, block_d=block_d, interpret=interpret)
+            if shd:
+                sharded = sharded + part
+            else:
+                replicated = replicated + part
+        if "model" in mesh.axis_names:
+            sharded = jax.lax.psum(sharded, "model")
+        return sharded + replicated
+
+    mapped = shard_map(local_partials, mesh=mesh, in_specs=in_specs,
+                       out_specs=P(), check_rep=False)
+    return finalize_dists(mapped(*leaves))
+
+
+def pairwise_sq_dists_tree(tree: Any, compute_dtype=jnp.float32, *,
+                           distance_backend: str = "xla", mesh=None,
+                           block_d: int = 4096,
+                           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Squared euclidean distances over the *concatenation* of all leaves.
+
+    Args:
+      tree: pytree of ``(n, *dims)`` worker-stacked gradients (ragged
+        trailing dims allowed; every leaf shares the worker axis).
+      compute_dtype: accumulation dtype of the ``"xla"`` backend and the
+        dtype of the returned matrix (the Pallas kernel always
+        accumulates fp32 internally).
+      distance_backend: ``"xla"`` | ``"pallas"`` | ``"auto"`` — see
+        ``resolve_distance_backend``.
+      mesh: optional device mesh.  With the Pallas backend and a mesh
+        whose ``model`` axis is non-trivial, the kernel runs per model
+        shard under ``shard_map`` and the (n, n) partials are psum'd;
+        otherwise the kernel runs on whole (unsharded) leaves.
+      block_d: Pallas VMEM tile width (ignored by the XLA backend).
+      interpret: Pallas interpret override (``None`` = auto per backend).
+
+    Returns:
+      ``(n, n)`` squared distances in ``compute_dtype``, computed as a
+      sum of per-leaf partial Gram matrices — no flat (n, d) copy is
+      ever built on either backend.
+    """
     n = _worker_count(tree)
+    backend = resolve_distance_backend(distance_backend, mesh)
+    if backend == "pallas":
+        from repro.dist.mesh import mesh_axis_sizes
+        if mesh is not None and mesh_axis_sizes(mesh).get("model", 1) > 1:
+            d2 = _pallas_sharded_dists(tree, mesh, block_d=block_d,
+                                       interpret=interpret)
+        else:
+            d2 = pairwise_gram_tree(tree, block_d=block_d,
+                                    interpret=interpret)
+        return d2.astype(compute_dtype)
     gram = jnp.zeros((n, n), compute_dtype)
     sq = jnp.zeros((n,), compute_dtype)
     for leaf in _leaves(tree):
@@ -90,9 +230,7 @@ def pairwise_sq_dists_tree(tree: Any, compute_dtype=jnp.float32
         axes = _trailing_axes(leaf)
         gram = gram + jnp.tensordot(x, x, axes=(axes, axes))
         sq = sq + jnp.sum(x * x, axis=axes)
-    d2 = sq[:, None] + sq[None, :] - 2.0 * gram
-    d2 = jnp.maximum(d2, 0.0)
-    return d2 * (1.0 - jnp.eye(n, dtype=d2.dtype))
+    return finalize_dists(sq[:, None] + sq[None, :] - 2.0 * gram)
 
 
 # ---------------------------------------------------------------------------
@@ -124,11 +262,19 @@ def _phase_nd(selected: jnp.ndarray, f: int) -> jnp.ndarray:
 
 def coordinate_phase_nd(selected: jnp.ndarray, f: int,
                         window: Optional[int] = None) -> jnp.ndarray:
-    """Bulyan's coordinate-wise phase on a (theta, *dims) stack -> (*dims).
+    """Bulyan's coordinate-wise phase over arbitrary trailing dims.
 
-    ``window`` caps the number of coordinates processed at once (the sort
-    + two cumsums need O(theta * window) workspace); ``None`` processes
-    every coordinate in one shot, preserving the input's sharding.
+    Args:
+      selected: ``(theta, *dims)`` stack of phase-1-selected gradients.
+      f: Byzantine bound; requires ``beta = theta - 2f >= 1``.
+      window: caps the number of coordinates processed at once (the sort
+        + two cumsums need O(theta * window) workspace); ``None``
+        processes every coordinate in one shot, preserving the input's
+        sharding.
+
+    Returns:
+      ``(*dims,)`` — per coordinate, the mean of the beta values closest
+      to the median (the contiguous-window argmin form).
     """
     theta = selected.shape[0]
     beta = theta - 2 * f
@@ -180,14 +326,30 @@ def _check_quorum(name: str, n: int, f: int) -> None:
 
 def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
                           agg_dtype: str = "native",
-                          window: Optional[int] = None
+                          window: Optional[int] = None,
+                          distance_backend: str = "auto", mesh=None
                           ) -> Tuple[Any, DistAggResult]:
     """Apply GAR ``gar`` across the leading worker axis of a stacked
     gradient pytree, leaf-wise (semantics contract: equals the flat core
     rule on ``stack_flatten`` of the same tree, see tests/test_dist.py).
 
-    Returns ``(aggregated pytree, DistAggResult)``; the aggregate's leaves
-    keep their input dtypes.
+    Args:
+      tree: pytree of ``(n, *dims)`` worker-stacked gradients.
+      f: Byzantine bound the rule defends against (quorum-checked).
+      gar: rule name from ``repro.core.gars.REGISTRY`` plus
+        ``"bulyan-<base>"`` for distance-only bases (krum/geomed).
+      agg_dtype: ``"native"`` (fp32) | ``"float32"`` | ``"bfloat16"`` —
+        the accumulation dtype contract (see module docstring).
+      window: coordinate-phase window for bulyan rules (see
+        ``coordinate_phase_nd``).
+      distance_backend: ``"xla"`` | ``"pallas"`` | ``"auto"`` — how the
+        (n, n) distance matrix of distance-based rules is computed (see
+        ``pairwise_sq_dists_tree``; non-distance rules ignore it).
+      mesh: optional device mesh for the shard-mapped Pallas path.
+
+    Returns:
+      ``(aggregated pytree, DistAggResult)``; the aggregate's leaves keep
+      their input dtypes.
     """
     n = _worker_count(tree)
     _check_quorum(gar, n, f)
@@ -197,6 +359,11 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
     uniform = jnp.full((n,), 1.0 / n, cdt)
     zeros_n = jnp.zeros((n,), cdt)
     scores = zeros_n
+
+    def dists():
+        return pairwise_sq_dists_tree(tree, cdt,
+                                      distance_backend=distance_backend,
+                                      mesh=mesh)
 
     if gar == "average":
         agg = [jnp.mean(l.astype(cdt), axis=0) for l in leaves]
@@ -209,7 +376,7 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
                for l in leaves]
         selected = uniform
     elif gar in ("krum", "geomed", "multikrum"):
-        dist2 = pairwise_sq_dists_tree(tree, cdt)
+        dist2 = dists()
         mask = jnp.ones((n,), bool)
         if gar == "geomed":
             scores = gars.geomed_scores(dist2, mask)
@@ -225,7 +392,7 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
             selected = jax.nn.one_hot(i, n, dtype=cdt)
             agg = _take_worker(leaves, i, cdt)
     elif gar == "brute":
-        dist2 = pairwise_sq_dists_tree(tree, cdt)
+        dist2 = dists()
         diam = gars.brute_subset_diameters(dist2, n, f)
         idx = jnp.asarray(gars._subsets(n, n - f))
         best = jnp.argmin(diam)
@@ -239,7 +406,7 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
         agg, selected = _centered_clip_tree(leaves, n, cdt)
     elif gar.startswith("bulyan"):
         base = gar.split("-", 1)[1] if "-" in gar else "krum"
-        dist2 = pairwise_sq_dists_tree(tree, cdt)
+        dist2 = dists()
         idx = bulyan_lib.select_indices_from_dists(dist2, f, base=base)
         agg = [coordinate_phase_nd(
             jnp.take(l.astype(cdt), idx, axis=0), f, window=window)
@@ -302,7 +469,8 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
                      gar_name: str = "krum", step=None, gamma=None,
                      scale: Optional[float] = None, eps: float = 0.5,
                      z: Optional[float] = None, target: int = 0,
-                     coord=0, margin: float = 1.0) -> Any:
+                     coord=0, margin: float = 1.0,
+                     direction: str = "ones") -> Any:
     """Replace the last ``f`` worker rows of every leaf with Byzantine
     submissions computed from the first ``n - f`` (honest) rows.
 
@@ -312,6 +480,22 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
     in-graph bisection of ``repro.core.attacks`` needs the full rule — and
     hence the flat matrix — inside the search loop, so the distributed
     runtime uses the estimate the paper itself used).
+
+    Args:
+      tree: pytree of ``(n, *dims)`` worker-stacked gradients.
+      f: number of rows to overwrite (``f <= 0`` is a no-op).
+      attack: attack name (see module body for the registry).
+      key: PRNG key for the ``random`` attack.
+      gar_name/step/gamma/scale/eps/z/target/coord/margin/direction:
+        per-attack parameters; ``coord`` indexes the concatenated
+        coordinate space of the whole tree, or ``"rotate"`` / ``"top"``;
+        ``direction`` is the linf attack's +-1 vector — ``"ones"`` or
+        ``"anti"`` (against the sign of the honest mean), matching the
+        flat ``repro.core.attacks.omniscient_linf``.
+
+    Returns:
+      The tree with the last f rows of every leaf replaced, dtypes and
+      shapes preserved exactly.
     """
     if f <= 0 or attack == "none":
         return tree
@@ -366,7 +550,14 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
             # coordinate forfeits the sqrt(d) amplification)
             g = (db * margin if estimated
                  else jnp.asarray(gamma, jnp.float32))
-            byz = [_broadcast(m + g, l) for m, l in zip(means, leaves)]
+            if direction == "anti":
+                # against the sign of the honest mean, zeros -> +1
+                # (the flat reference's worst-case +-1 vector)
+                es = [jnp.where(m == 0, 1.0, -jnp.sign(m)) for m in means]
+            else:
+                es = [jnp.ones_like(m) for m in means]
+            byz = [_broadcast(m + g * e, l)
+                   for m, e, l in zip(means, es, leaves)]
         else:
             # §3.2: one coordinate, gamma_m ~ d^{1/p} closed form (§B).
             # ``coord`` indexes the concatenated coordinate space of the

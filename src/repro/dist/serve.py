@@ -14,6 +14,8 @@ import jax.numpy as jnp
 from repro.models import decode_step, prefill
 from repro.models.config import ModelConfig
 
+__all__ = ["make_prefill_step", "make_serve_step"]
+
 
 def make_prefill_step(cfg: ModelConfig, impl: str = "auto") -> Callable:
     """``step(params, tokens[, extra]) -> (logits, cache)`` — full-sequence

@@ -19,6 +19,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.mesh import mesh_axis_sizes
 
+__all__ = ["LEGACY_RULES", "batch_pspec", "cache_shardings", "gram_pspec",
+           "param_shardings"]
+
 #: pre-iteration parameter rules (A/B baseline; see launch.dryrun)
 LEGACY_RULES = False
 
@@ -61,6 +64,13 @@ def param_shardings(tree: Any, mesh) -> Any:
     a full replica — the paper's protocol) and tensor-sharded across
     ``model``.  Optimizer state mirrors its parameter's layout because it
     has the parameter's shape; scalar state (step counters) replicates.
+
+    Args:
+      tree: parameter (or optimizer-state) pytree of arrays.
+      mesh: the device mesh.
+
+    Returns:
+      A pytree of ``NamedSharding`` with the structure of ``tree``.
     """
     model = mesh_axis_sizes(mesh).get("model", 1)
     return jax.tree_util.tree_map_with_path(
@@ -84,12 +94,18 @@ def _first_fit(dim: int, sizes, options) -> Any:
 def batch_pspec(shape: Sequence[int], mesh, worker_axis: bool = True) -> P:
     """PartitionSpec for model inputs.
 
-    worker_axis=True   (n_workers, per_worker, ...): the worker axis maps
-                       onto ``data`` (one worker per data slice); the
-                       per-worker batch additionally splits over ``pod``
-                       when present.
-    worker_axis=False  (batch, ...): serving inputs — batch spreads over
-                       every data-parallel axis that divides it.
+    Args:
+      shape: the input's global shape.
+      mesh: the device mesh.
+      worker_axis: ``True`` for training inputs ``(n_workers,
+        per_worker, ...)`` — the worker axis maps onto ``data`` (one
+        worker per data slice) and the per-worker batch additionally
+        splits over ``pod`` when present.  ``False`` for serving inputs
+        ``(batch, ...)`` — batch spreads over every data-parallel axis
+        that divides it.
+
+    Returns:
+      ``PartitionSpec`` for the input (trailing ``None`` entries pruned).
     """
     sizes = mesh_axis_sizes(mesh)
     if not shape:
@@ -107,6 +123,41 @@ def batch_pspec(shape: Sequence[int], mesh, worker_axis: bool = True) -> P:
     return P(*spec)
 
 
+def gram_pspec(shape: Sequence[int], mesh, path=()) -> P:
+    """PartitionSpec for a stacked-gradient leaf entering the shard-mapped
+    Pallas distance pass (``repro.dist.robust`` with
+    ``distance_backend="pallas"``).
+
+    Args:
+      shape: the leaf's global shape ``(n_workers, *param_dims)``.
+      mesh: the device mesh (only the ``model`` axis matters here).
+      path: the leaf's tree path (as from ``tree_flatten_with_path``);
+        used to recognize scanned-layer ``periods`` leaves.
+
+    Returns:
+      ``PartitionSpec`` with the worker axis replicated (every shard's
+      local Gram contraction needs all n rows of its coordinate slice) and
+      the largest evenly-divisible trailing dim sharded over ``model`` —
+      the same rule as ``param_shardings`` including the never-shard rule
+      for the stacked-period axis (index 1 here, behind the worker axis),
+      so gradient leaves enter the kernel in the layout GSPMD already
+      gave them.  Indivisible leaves stay fully replicated, which is
+      always correct.
+    """
+    model = mesh_axis_sizes(mesh).get("model", 1)
+    spec = [None] * len(shape)
+    if model > 1 and len(shape) >= 2:
+        in_periods = "periods" in _path_keys(path)
+        order = sorted(range(1, len(shape)), key=lambda i: (-shape[i], -i))
+        for i in order:
+            if in_periods and i == 1:
+                continue
+            if shape[i] >= model and shape[i] % model == 0:
+                spec[i] = "model"
+                break
+    return P(*spec)
+
+
 def cache_shardings(cache: Any, mesh) -> Any:
     """NamedSharding pytree for decode caches.
 
@@ -115,6 +166,13 @@ def cache_shardings(cache: Any, mesh) -> Any:
     ``(B, ...)``.  The batch axis shards over the data-parallel axes; the
     rest follows the activations (replicated over ``model`` — KV heads are
     usually too few to split a 16-way axis).
+
+    Args:
+      cache: decode-cache pytree.
+      mesh: the device mesh.
+
+    Returns:
+      A pytree of ``NamedSharding`` with the structure of ``cache``.
     """
     sizes = mesh_axis_sizes(mesh)
 

@@ -26,6 +26,8 @@ from repro.models import forward
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer
 
+__all__ = ["DistByzantineSpec", "make_loss_fn", "make_train_step"]
+
 
 @dataclasses.dataclass(frozen=True)
 class DistByzantineSpec:
@@ -35,6 +37,13 @@ class DistByzantineSpec:
     the aggregation rule defends against (``declared_f`` overrides the
     latter).  The worker count is taken from the batch's leading axis at
     trace time; the quorum check runs then.
+
+    ``distance_backend`` selects the (n, n) pairwise-distance
+    implementation of distance-based GARs: ``"xla"`` (tensordot, GSPMD),
+    ``"pallas"`` (the tiled kernel — shard-mapped when ``make_train_step``
+    is given a mesh) or ``"auto"`` (pallas only on TPU *with* a
+    model-parallel mesh threaded through, xla otherwise).  See
+    ``repro.dist.robust.resolve_distance_backend``.
     """
 
     f: int
@@ -42,6 +51,7 @@ class DistByzantineSpec:
     attack: str = "none"
     attack_kwargs: tuple = ()          # (("gamma", 10.0), ...)
     agg_dtype: str = "native"          # native | float32 | bfloat16
+    distance_backend: str = "auto"     # auto | xla | pallas
     declared_f: Optional[int] = None
     seed: int = 0
 
@@ -78,7 +88,8 @@ def _global_norm(tree) -> jnp.ndarray:
 
 
 def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
-                    optimizer: Optimizer, impl: str = "auto") -> Callable:
+                    optimizer: Optimizer, impl: str = "auto",
+                    mesh=None) -> Callable:
     """Build ``step(params, opt_state, batch) -> (params, opt_state,
     metrics)``.
 
@@ -87,6 +98,11 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
     compute real gradients; when an attack is configured the last ``f``
     are overwritten in-graph by the omniscient adversary (it reads the
     honest gradients first, per the paper's threat model).
+
+    ``mesh`` is only consulted by the Pallas distance backend (it pins the
+    ``shard_map`` layout of the distance pass); the XLA backend keeps the
+    step mesh-agnostic exactly as before — sharding enters via the
+    input/output shardings the caller jits with.
     """
     loss_fn = make_loss_fn(cfg, impl)
     vg = jax.value_and_grad(loss_fn)
@@ -114,8 +130,9 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
             grads = inject_byzantine(grads, f, spec.attack, key=key,
                                      step=opt_state["step"], **akw)
 
-        agg, res = distributed_aggregate(grads, spec.f_declared, spec.gar,
-                                         agg_dtype=spec.agg_dtype)
+        agg, res = distributed_aggregate(
+            grads, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            distance_backend=spec.distance_backend, mesh=mesh)
         new_params, new_state = optimizer.update(agg, opt_state, params)
 
         honest_mean = jax.tree_util.tree_map(

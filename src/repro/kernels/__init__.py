@@ -11,7 +11,10 @@ shape/dtype-sweep tests.
 """
 from repro.kernels.bulyan_select import bulyan_select
 from repro.kernels.coord_stats import coord_stats
-from repro.kernels.pairwise_gram import pairwise_gram
+from repro.kernels.pairwise_gram import (pairwise_gram,
+                                         pairwise_gram_partial,
+                                         pairwise_gram_tree)
 from repro.kernels import ops, ref
 
-__all__ = ["bulyan_select", "coord_stats", "pairwise_gram", "ops", "ref"]
+__all__ = ["bulyan_select", "coord_stats", "ops", "pairwise_gram",
+           "pairwise_gram_partial", "pairwise_gram_tree", "ref"]

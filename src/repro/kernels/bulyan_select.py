@@ -22,11 +22,15 @@ this phase over the `model` mesh axis).
 from __future__ import annotations
 
 import functools
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.pairwise_gram import resolve_interpret
+
+__all__ = ["bulyan_select"]
 
 
 def _oe_sort_rows(rows: List[jnp.ndarray]) -> List[jnp.ndarray]:
@@ -79,10 +83,20 @@ def _make_kernel(theta: int, f: int):
 
 @functools.partial(jax.jit, static_argnames=("f", "block_d", "interpret"))
 def bulyan_select(selected: jnp.ndarray, f: int, *, block_d: int = 2048,
-                  interpret: bool = True) -> jnp.ndarray:
-    """(theta, d) -> (d,): Bulyan coordinate phase.
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Bulyan coordinate phase, fused.
 
-    ``interpret=True`` for CPU validation; ``interpret=False`` on TPU.
+    Args:
+      selected: ``(theta, d)`` stack of the theta selected gradients.
+      f: Byzantine bound; requires ``beta = theta - 2f >= 1``.
+      block_d: VMEM tile width along d.
+      interpret: ``None`` resolves per backend (compiled on TPU,
+        interpreter elsewhere); see ``pairwise_gram.resolve_interpret``.
+
+    Returns:
+      ``(d,)`` float32: per coordinate, the mean of the beta sorted
+      values closest to the median.
+
     VMEM per step ~ (theta + 1) * block_d * 4 bytes (slab + output row) plus
     the unrolled temporaries; with theta = 16, block_d = 2048 that is well
     under VMEM even with double buffering.
@@ -102,6 +116,6 @@ def bulyan_select(selected: jnp.ndarray, f: int, *, block_d: int = 2048,
         in_specs=[pl.BlockSpec((theta, block_d), lambda i: (0, i))],
         out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, dp), jnp.float32),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(selected)
     return out[0, :d]

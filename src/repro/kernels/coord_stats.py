@@ -14,12 +14,16 @@ Same structure as bulyan_select: grid over d blocks, rows unrolled
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.bulyan_select import _oe_sort_rows
+from repro.kernels.pairwise_gram import resolve_interpret
+
+__all__ = ["coord_stats"]
 
 
 def _make_kernel(n: int, f: int):
@@ -41,8 +45,19 @@ def _make_kernel(n: int, f: int):
 
 @functools.partial(jax.jit, static_argnames=("f", "block_d", "interpret"))
 def coord_stats(grads: jnp.ndarray, f: int, *, block_d: int = 2048,
-                interpret: bool = True):
-    """(n, d) -> (median (d,), f-trimmed mean (d,)); requires n > 2f."""
+                interpret: Optional[bool] = None):
+    """Fused coordinate-wise median + f-trimmed mean.
+
+    Args:
+      grads: ``(n, d)`` worker-stacked flat gradients; requires n > 2f.
+      f: trim count per side.
+      block_d: VMEM tile width along d.
+      interpret: ``None`` resolves per backend (compiled on TPU,
+        interpreter elsewhere).
+
+    Returns:
+      ``(median, trimmed_mean)``, each ``(d,)`` float32.
+    """
     n, d = grads.shape
     if n <= 2 * f:
         raise ValueError(f"need n > 2f (n={n}, f={f})")
@@ -59,6 +74,6 @@ def coord_stats(grads: jnp.ndarray, f: int, *, block_d: int = 2048,
                    pl.BlockSpec((1, block_d), lambda i: (0, i))),
         out_shape=(jax.ShapeDtypeStruct((1, dp), jnp.float32),
                    jax.ShapeDtypeStruct((1, dp), jnp.float32)),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(grads)
     return med[0, :d], trim[0, :d]

@@ -6,7 +6,7 @@ on TPU) and the pure-jnp oracle.  The GAR core calls these through
 """
 from __future__ import annotations
 
-import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -15,29 +15,52 @@ from repro.kernels import ref
 from repro.kernels.bulyan_select import bulyan_select as _bulyan_select
 from repro.kernels.pairwise_gram import pairwise_gram as _pairwise_gram
 
+__all__ = ["bulyan_coordinate", "pairwise_distances"]
+
 # Pallas interpret mode is pure-Python per grid step — correct everywhere,
 # fast only on TPU.  Default to the oracle on CPU, the kernel on TPU.
 _ON_TPU = jax.default_backend() == "tpu"
 
 
-def pairwise_distances(grads: jnp.ndarray, *, use_pallas: bool = None,
+def pairwise_distances(grads: jnp.ndarray, *,
+                       use_pallas: Optional[bool] = None,
                        block_d: int = 4096) -> jnp.ndarray:
-    """(n, d) -> (n, n) squared distances; kernel or oracle."""
+    """Squared pairwise distances; kernel or oracle.
+
+    Args:
+      grads: ``(n, d)`` worker-stacked flat gradients.
+      use_pallas: ``None`` picks the kernel on TPU and the jnp oracle
+        elsewhere; ``True`` forces the kernel (interpreter off-TPU).
+      block_d: kernel VMEM tile width.
+
+    Returns:
+      ``(n, n)`` float32 squared distances, zero diagonal.
+    """
     if use_pallas is None:
         use_pallas = _ON_TPU
     if use_pallas:
-        return _pairwise_gram(grads, block_d=block_d, interpret=not _ON_TPU)
+        return _pairwise_gram(grads, block_d=block_d)
     return ref.pairwise_gram_ref(grads)
 
 
 def bulyan_coordinate(selected: jnp.ndarray, f: int, *,
-                      use_pallas: bool = None,
+                      use_pallas: Optional[bool] = None,
                       block_d: int = 2048) -> jnp.ndarray:
-    """(theta, d) -> (d,) Bulyan coordinate phase; kernel or oracle."""
+    """Bulyan coordinate phase; kernel or oracle.
+
+    Args:
+      selected: ``(theta, d)`` selected-gradient stack.
+      f: Byzantine bound (``beta = theta - 2f``).
+      use_pallas: ``None`` picks the kernel on TPU, the pure-jnp
+        ``repro.core.bulyan.coordinate_phase`` elsewhere.
+      block_d: kernel VMEM tile width.
+
+    Returns:
+      ``(d,)`` float32 coordinate-phase aggregate.
+    """
     if use_pallas is None:
         use_pallas = _ON_TPU
     if use_pallas:
-        return _bulyan_select(selected, f, block_d=block_d,
-                              interpret=not _ON_TPU)
+        return _bulyan_select(selected, f, block_d=block_d)
     from repro.core.bulyan import coordinate_phase
     return coordinate_phase(selected, f)

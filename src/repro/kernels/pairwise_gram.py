@@ -10,14 +10,49 @@ the single (n, n) output block that stays resident in VMEM across steps.
 VMEM budget per step: n * block_d * 4 bytes (slab) + n*n*4 (accumulator).
 With n = 32 and block_d = 4096 that is ~512 KiB — far under the ~16 MiB
 v5e VMEM, leaving room for double buffering of the HBM stream.
+
+Three entry points, one kernel:
+
+  pairwise_gram          (n, d) -> (n, n) distances (the classic API)
+  pairwise_gram_partial  raw un-clamped partial over one slab — the
+                         accumulable building block: partials over disjoint
+                         coordinate slices *sum* to the partial over their
+                         concatenation, which is what both the pytree and
+                         the shard_map paths exploit
+  pairwise_gram_tree     partial per pytree leaf (ragged trailing dims are
+                         flattened per leaf), summed, then finalized
+
+``interpret=None`` (the default everywhere) resolves from
+``jax.default_backend()``: the compiled kernel on TPU, the Pallas
+interpreter on CPU/GPU — so the same call sites run in CPU CI and on a pod.
 """
 from __future__ import annotations
 
 import functools
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+__all__ = ["finalize_dists", "pairwise_gram", "pairwise_gram_partial",
+           "pairwise_gram_tree", "resolve_interpret"]
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve the ``interpret`` knob against the active jax backend.
+
+    Args:
+      interpret: ``True`` / ``False`` to force, ``None`` to pick the
+        compiled kernel on TPU and the Pallas interpreter elsewhere
+        (CPU CI containers, GPU hosts).
+
+    Returns:
+      bool: the concrete interpret flag to hand to ``pl.pallas_call``.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _gram_kernel(g_ref, out_ref):
@@ -38,28 +73,101 @@ def _gram_kernel(g_ref, out_ref):
         out_ref[...] += part
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def pairwise_gram(grads: jnp.ndarray, *, block_d: int = 4096,
-                  interpret: bool = True) -> jnp.ndarray:
-    """(n, d) -> (n, n) squared euclidean distances.
+def finalize_dists(raw: jnp.ndarray) -> jnp.ndarray:
+    """Turn summed raw partials into a valid distance matrix.
 
-    ``interpret=True`` runs the kernel body in the Pallas interpreter (this
-    container is CPU-only); on real TPU pass ``interpret=False``.
+    Args:
+      raw: ``(n, n)`` sum of ``pairwise_gram_partial`` outputs (any
+        backend — also used by the tensordot path in
+        ``repro.dist.robust``).
+
+    Returns:
+      ``(n, n)`` with fp-cancellation negatives clamped to zero and the
+      diagonal zeroed (exact by definition).
     """
-    n, d = grads.shape
+    n = raw.shape[0]
+    out = jnp.maximum(raw, 0.0)
+    return out * (1.0 - jnp.eye(n, dtype=out.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_gram_partial(slab: jnp.ndarray, *, block_d: int = 4096,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Raw distance partial of one coordinate slab — the accumulable form.
+
+    Args:
+      slab: ``(n, *dims)`` worker-stacked coordinate slice; trailing dims
+        are flattened (distances are permutation-invariant over
+        coordinates, so any flattening order is exact).
+      block_d: VMEM tile width along the flattened coordinate axis.
+      interpret: see ``resolve_interpret``.
+
+    Returns:
+      ``(n, n)`` float32 ``sq_i + sq_j - 2 <x_i, x_j>`` over this slab's
+      coordinates only — NOT clamped and with a nonzero diagonal, so that
+      partials over disjoint slabs (pytree leaves, model shards) sum to
+      the partial over their union.  Finalize with the module-level
+      clamp once all partials are summed (``pairwise_gram`` does both).
+    """
+    n = slab.shape[0]
+    slab = slab.reshape(n, -1)
+    d = slab.shape[1]
     block_d = min(block_d, max(d, 128))
     pad = (-d) % block_d
     if pad:
         # zero padding adds |0-0|^2 = 0 to every distance: exact
-        grads = jnp.pad(grads, ((0, 0), (0, pad)))
-    dp = grads.shape[1]
-    out = pl.pallas_call(
+        slab = jnp.pad(slab, ((0, 0), (0, pad)))
+    dp = slab.shape[1]
+    return pl.pallas_call(
         _gram_kernel,
         grid=(dp // block_d,),
         in_specs=[pl.BlockSpec((n, block_d), lambda i: (0, i))],
         out_specs=pl.BlockSpec((n, n), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
-        interpret=interpret,
-    )(grads)
-    out = jnp.maximum(out, 0.0)
-    return out * (1.0 - jnp.eye(n, dtype=out.dtype))
+        interpret=resolve_interpret(interpret),
+    )(slab)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_gram(grads: jnp.ndarray, *, block_d: int = 4096,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Pairwise squared euclidean distances of worker gradient rows.
+
+    Args:
+      grads: ``(n, d)`` worker-stacked flat gradients, any float dtype
+        (accumulation is fp32 inside the kernel).
+      block_d: VMEM tile width along d.
+      interpret: see ``resolve_interpret`` (default: auto per backend).
+
+    Returns:
+      ``(n, n)`` float32 squared distances, non-negative, zero diagonal.
+    """
+    return finalize_dists(pairwise_gram_partial(
+        grads, block_d=block_d, interpret=interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def pairwise_gram_tree(tree: Any, *, block_d: int = 4096,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Distances over the concatenation of all pytree leaves.
+
+    Args:
+      tree: pytree whose leaves are ``(n, *dims)`` with a shared leading
+        worker axis; trailing dims may be ragged across leaves — each
+        leaf is flattened and tiled independently.
+      block_d: VMEM tile width per leaf.
+      interpret: see ``resolve_interpret``.
+
+    Returns:
+      ``(n, n)`` float32 squared distances over the concatenated
+      coordinate space — no flat ``(n, d)`` matrix is ever built.
+    """
+    leaves = jax.tree_util.tree_leaves(tree)
+    if not leaves:
+        raise ValueError("empty gradient tree")
+    n = leaves[0].shape[0]
+    raw = jnp.zeros((n, n), jnp.float32)
+    for leaf in leaves:
+        raw = raw + pairwise_gram_partial(
+            leaf, block_d=block_d, interpret=interpret)
+    return finalize_dists(raw)

@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+__all__ = ["bulyan_select_ref", "coord_stats_ref", "pairwise_gram_ref"]
+
 
 def pairwise_gram_ref(grads: jnp.ndarray) -> jnp.ndarray:
     """(n, d) -> (n, n) squared euclidean distances, fp32 accumulation."""

@@ -125,7 +125,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             reduced: bool = False, impl: str = "auto",
             optimizer_name: str = "momentum", moe_impl: Optional[str] = None,
             param_dtype: Optional[str] = None, agg_dtype: str = "native",
-            unroll: bool = False, attn_shard: Optional[str] = None,
+            distance_backend: str = "auto", unroll: bool = False,
+            attn_shard: Optional[str] = None,
             logits_dtype: Optional[str] = None,
             out_path: Optional[str] = None) -> Dict[str, Any]:
     import jax
@@ -174,7 +175,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "mesh": "x".join(map(str, mesh.devices.shape)),
         "multi_pod": multi_pod, "gar": gar, "attack": attack,
         "reduced": reduced, "impl": impl, "overrides": overrides,
-        "agg_dtype": agg_dtype,
+        "agg_dtype": agg_dtype, "distance_backend": distance_backend,
     }
     n_chips = mesh.devices.size
     t0 = time.time()
@@ -187,8 +188,9 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             opt = get_optimizer(optimizer_name, 1e-3)
             opt_state, opt_sh = S.opt_specs(params, opt, mesh)
             spec = DistByzantineSpec(f=3, gar=gar, attack=attack,
-                                     agg_dtype=agg_dtype)
-            step = make_train_step(cfg, spec, opt, impl=impl)
+                                     agg_dtype=agg_dtype,
+                                     distance_backend=distance_backend)
+            step = make_train_step(cfg, spec, opt, impl=impl, mesh=mesh)
             jitted = jax.jit(step, donate_argnums=(0, 1),
                              out_shardings=(param_sh, opt_sh, None))
             lowered = jitted.lower(params, opt_state, inputs)
@@ -275,6 +277,11 @@ def main() -> None:
     ap.add_argument("--agg-dtype", default="native",
                     choices=["native", "bfloat16", "float32"],
                     help="gradient dtype for the robust aggregation")
+    ap.add_argument("--distance-backend", default="auto",
+                    choices=["auto", "xla", "pallas"],
+                    help="pairwise-distance implementation for distance-"
+                         "based GARs (pallas = shard-mapped tiled kernel; "
+                         "auto = pallas on TPU, xla elsewhere)")
     ap.add_argument("--expert-gather", action="store_true",
                     help="constrain expert weights to TP-only at use site "
                          "(per-layer all-gather instead of activation "
@@ -302,6 +309,7 @@ def main() -> None:
                   gar=args.gar, attack=args.attack, reduced=args.reduced,
                   impl=args.impl, moe_impl=args.moe_impl,
                   param_dtype=args.param_dtype, agg_dtype=args.agg_dtype,
+                  distance_backend=args.distance_backend,
                   unroll=args.unroll, attn_shard=args.attn_shard,
                   logits_dtype=args.logits_dtype, out_path=args.out)
     print(json.dumps(rec, indent=1))

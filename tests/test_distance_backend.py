@@ -1,0 +1,191 @@
+"""Distance-backend dispatch tests.
+
+Parity: the Pallas backend (interpret mode in this CPU container) must
+match the XLA tensordot backend to 1e-4 on random pytrees — both as raw
+(n, n) distances and through ``distributed_aggregate`` for every
+distance-based GAR.  ``"auto"`` must resolve to the clean XLA fallback
+off-TPU.  The shard-mapped path runs in an 8-device subprocess (same
+pattern as tests/test_dist.py) and is pinned against the unsharded
+result.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dist.robust import (distributed_aggregate,
+                               pairwise_sq_dists_tree,
+                               resolve_distance_backend)
+from repro.kernels import pairwise_gram, pairwise_gram_tree
+from repro.kernels.pairwise_gram import resolve_interpret
+from repro.kernels.ref import pairwise_gram_ref
+
+KEY = jax.random.PRNGKey(11)
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _random_tree(n, key=KEY, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"a": {"w": jax.random.normal(k1, (n, 8, 16)).astype(dtype)},
+            "b": jax.random.normal(k2, (n, 130)).astype(dtype),  # pads
+            "c": jax.random.normal(k3, (n, 2, 3, 4)).astype(dtype),
+            "d": jax.random.normal(k4, (n, 5)).astype(dtype)}
+
+
+class TestBackendParity:
+    @pytest.mark.parametrize("n", [5, 11, 16])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dists_pallas_matches_xla(self, n, dtype):
+        tree = _random_tree(n, jax.random.fold_in(KEY, n), dtype)
+        xla = pairwise_sq_dists_tree(tree, distance_backend="xla")
+        pal = pairwise_sq_dists_tree(tree, distance_backend="pallas",
+                                     interpret=True)
+        tol = 1e-4 if dtype == jnp.float32 else 5e-2
+        np.testing.assert_allclose(pal, xla, rtol=tol, atol=tol)
+
+    def test_tree_kernel_matches_flat_ref(self):
+        tree = _random_tree(9)
+        flat = jnp.concatenate(
+            [l.reshape(9, -1) for l in jax.tree_util.tree_leaves(tree)], 1)
+        np.testing.assert_allclose(
+            pairwise_gram_tree(tree, interpret=True),
+            pairwise_gram_ref(flat), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("gar", ["krum", "geomed", "multikrum",
+                                     "brute", "bulyan-krum",
+                                     "bulyan-geomed"])
+    def test_aggregate_pallas_matches_xla(self, gar):
+        n, f = 11, 2
+        tree = _random_tree(n)
+        a_x, r_x = distributed_aggregate(tree, f, gar,
+                                         distance_backend="xla")
+        a_p, r_p = distributed_aggregate(tree, f, gar,
+                                         distance_backend="pallas")
+        for x, p in zip(jax.tree_util.tree_leaves(a_x),
+                        jax.tree_util.tree_leaves(a_p)):
+            np.testing.assert_allclose(p, x, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(r_p.selected, r_x.selected,
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestAutoFallback:
+    def test_auto_resolves_to_xla_off_tpu(self):
+        assert jax.default_backend() != "tpu"  # this container
+        assert resolve_distance_backend("auto") == "xla"
+        # with or without a mesh: off-TPU auto is always the XLA path
+        from repro.dist.mesh import make_host_mesh
+        assert resolve_distance_backend(
+            "auto", make_host_mesh((1, 1))) == "xla"
+
+    def test_auto_aggregate_runs_and_matches(self):
+        tree = _random_tree(7)
+        a_auto, _ = distributed_aggregate(tree, 1, "krum",
+                                          distance_backend="auto")
+        a_xla, _ = distributed_aggregate(tree, 1, "krum",
+                                         distance_backend="xla")
+        for a, x in zip(jax.tree_util.tree_leaves(a_auto),
+                        jax.tree_util.tree_leaves(a_xla)):
+            np.testing.assert_array_equal(a, x)
+
+    def test_bad_backend_rejected(self):
+        with pytest.raises(ValueError, match="distance_backend"):
+            pairwise_sq_dists_tree(_random_tree(5),
+                                   distance_backend="cuda")
+
+    def test_interpret_default_follows_backend(self):
+        # the satellite fix: no explicit interpret under jit must NOT
+        # mean interpret=True on TPU — the default resolves per backend
+        assert resolve_interpret(None) == (jax.default_backend() != "tpu")
+        g = jax.random.normal(KEY, (6, 300))
+        np.testing.assert_allclose(pairwise_gram(g), pairwise_gram_ref(g),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_omniscient_linf_direction_anti(self):
+        from repro.dist.robust import inject_byzantine
+        n, f = 7, 2
+        tree = _random_tree(n)
+        out = inject_byzantine(tree, f, "omniscient_linf", gamma=2.0,
+                               direction="anti")
+        for lo, li in zip(jax.tree_util.tree_leaves(out),
+                          jax.tree_util.tree_leaves(tree)):
+            m = np.mean(np.asarray(li[:n - f], np.float32), axis=0)
+            e = np.where(m == 0, 1.0, -np.sign(m))
+            np.testing.assert_allclose(np.asarray(lo[n - f]), m + 2.0 * e,
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_non_distance_gars_ignore_backend(self):
+        tree = _random_tree(7)
+        for backend in ("xla", "pallas", "auto"):
+            a, _ = distributed_aggregate(tree, 1, "cwmed",
+                                         distance_backend=backend)
+            w, _ = distributed_aggregate(tree, 1, "cwmed")
+            for x, y in zip(jax.tree_util.tree_leaves(a),
+                            jax.tree_util.tree_leaves(w)):
+                np.testing.assert_array_equal(x, y)
+
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.dist.mesh import make_host_mesh
+    from repro.dist.robust import (distributed_aggregate,
+                                   pairwise_sq_dists_tree)
+
+    assert jax.device_count() == 8
+    mesh = make_host_mesh((4, 2), ("data", "model"))
+    key = jax.random.PRNGKey(3)
+    k1, k2, k3 = jax.random.split(key, 3)
+    n = 8
+    # "v" (trailing dim 5, indivisible by the 2-way model axis) enters
+    # shard_map replicated — its partial must be summed exactly once,
+    # not psum'd (the double-count regression)
+    k4 = jax.random.fold_in(key, 4)
+    tree = {"a": {"w": jax.random.normal(k1, (n, 8, 16))},
+            "b": jax.random.normal(k2, (n, 64)),
+            "c": jax.random.normal(k3, (n, 2, 3, 4)),
+            "v": jax.random.normal(k4, (n, 5))}
+    ref = pairwise_sq_dists_tree(tree)           # xla, unsharded
+    ref_agg, _ = distributed_aggregate(tree, 1, "krum")
+
+    # grads laid out as the train step produces them: worker axis on data
+    sharded = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, NamedSharding(mesh, P("data"))), tree)
+    with mesh:
+        dists = jax.jit(lambda t: pairwise_sq_dists_tree(
+            t, distance_backend="pallas", mesh=mesh, interpret=True))(
+                sharded)
+        agg = jax.jit(lambda t: distributed_aggregate(
+            t, 1, "krum", distance_backend="pallas", mesh=mesh)[0])(
+                sharded)
+
+    agg_diffs = [float(jnp.max(jnp.abs(a - b))) for a, b in
+                 zip(jax.tree_util.tree_leaves(agg),
+                     jax.tree_util.tree_leaves(ref_agg))]
+    print(json.dumps({
+        "devices": jax.device_count(),
+        "dist_diff": float(jnp.max(jnp.abs(dists - ref))),
+        "agg_diff": max(agg_diffs),
+    }))
+""")
+
+
+@pytest.mark.slow
+def test_shard_map_backend_matches_unsharded():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    r = subprocess.run([sys.executable, "-c", _SUBPROCESS_SCRIPT],
+                       capture_output=True, text=True, timeout=600, env=env)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["devices"] == 8
+    assert out["dist_diff"] < 1e-4
+    assert out["agg_diff"] < 1e-4
