@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit
+from repro.agg import init_state, resolve_rule
 from repro.core import get_gar
 from repro.core import pytree as pt
 from repro.dist.robust import distributed_aggregate
@@ -129,7 +130,55 @@ def main_backends(ds=(100_000, 1_000_000), ns=(15, 39)) -> None:
                      f"dist_vs_flat={us / us_flat:.2f}", backend)
 
 
+def main_buffered(ds=(100_000, 1_000_000), ns=(15,)) -> None:
+    """Stateful rules (buffered-* history window, momentum centered-clip)
+    vs their stateless bases on the same data.
+
+    The derived column reports the overhead ratio over the stateless
+    base — the cost of the ring-buffer write + window mean (buffered-*)
+    or of the carried center (centered_clip_momentum).  Each measured
+    call's returned state feeds the next call, exactly as the trainer
+    loop threads it.
+    """
+    key = jax.random.PRNGKey(3)
+    pairs = (("buffered-cwmed", "cwmed"), ("buffered-krum", "krum"),
+             ("centered_clip_momentum", "centered_clip"))
+
+    def _time_threaded(fn, x, s, reps: int = 5) -> float:
+        out, s = fn(x, s)
+        jax.block_until_ready(out)
+        t0 = time.time()
+        for _ in range(reps):
+            out, s = fn(x, s)
+        jax.block_until_ready(out)
+        return 1e6 * (time.time() - t0) / reps
+
+    for n in ns:
+        f = (n - 3) // 4
+        for d in ds:
+            g = jax.random.normal(key, (n, d))
+            for name, base in pairs:
+                rule = resolve_rule(name)
+                base_fn = get_gar(base)
+                us_base = _time(
+                    jax.jit(lambda x, fn=base_fn: fn(x, f).gradient), g)
+                state = init_state(rule, g)
+
+                @jax.jit
+                def stateful(x, s, fn=rule.dense_fn):
+                    res, s = fn(x, f, s)
+                    return res.gradient, s
+
+                # prime the history so the steady-state cost is measured
+                _, state = stateful(g, state)
+                us = _time_threaded(stateful, g, state)
+                emit(f"gar_throughput/{name}_n{n}_d{d}", us,
+                     f"base_us={us_base:.0f};"
+                     f"stateful_over_base={us / max(us_base, 1e-9):.2f}")
+
+
 if __name__ == "__main__":
     main()
     main_dist()
     main_backends()
+    main_buffered()

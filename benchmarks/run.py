@@ -34,6 +34,7 @@ def main() -> None:
         ("gar_throughput", lambda: gar_throughput.main()),
         ("gar_throughput_dist", lambda: gar_throughput.main_dist()),
         ("gar_backends", lambda: gar_throughput.main_backends()),
+        ("gar_buffered", lambda: gar_throughput.main_buffered()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
         ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),
         ("fig45", lambda: fig45_bulyan_defense.main(steps=steps45)),

@@ -22,7 +22,8 @@ import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.data.synthetic import lm_batches
-from repro.dist.train import DistByzantineSpec, make_train_step
+from repro.dist.train import (DistByzantineSpec, init_agg_state,
+                              make_train_step)
 from repro.models import init_model
 from repro.models.config import ModelConfig
 from repro.optim import get_optimizer
@@ -79,6 +80,8 @@ def main():
 
     spec = DistByzantineSpec(f=args.f, gar=args.gar, attack=args.attack)
     step = jax.jit(make_train_step(cfg, spec, opt))
+    # stateful GARs (buffered-*, centered_clip_momentum) carry an AggState
+    agg_state = init_agg_state(spec, params, args.workers)
 
     n, b, s = args.workers, args.batch, args.seq
     t0 = time.time()
@@ -90,7 +93,11 @@ def main():
             labs.append(y)
         batch = {"tokens": jnp.asarray(np.stack(toks)),
                  "labels": jnp.asarray(np.stack(labs))}
-        params, state, m = step(params, state, batch)
+        if agg_state is not None:
+            params, state, m, agg_state = step(params, state, batch,
+                                               agg_state)
+        else:
+            params, state, m = step(params, state, batch)
         if t % 10 == 0 or t == start + args.steps - 1:
             dt = time.time() - t0
             tok_s = (t - start + 1) * n * b * s / max(dt, 1e-9)

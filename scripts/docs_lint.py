@@ -1,4 +1,4 @@
-"""Docs lint: keep README.md / docs/*.md honest.
+"""Docs lint: keep README.md / docs/*.md (and module docstrings) honest.
 
 Three checks over every markdown file given (default: README.md and
 docs/**/*.md from the repo root):
@@ -10,12 +10,19 @@ docs/**/*.md from the repo root):
   3. every repo-relative path mentioned in the text (src/..., docs/...,
      examples/..., benchmarks/..., tests/..., scripts/...) must exist.
 
+``--modules mod [mod ...]`` switches to the *module audit* instead: each
+named python module must export a sorted ``__all__``, every exported
+symbol must carry a docstring, and every exported function taking
+arguments must document them with ``Args:`` / ``Returns:`` sections.
+
 Exit status is the number of failures; run from CI as
-``PYTHONPATH=src python scripts/docs_lint.py``.
+``PYTHONPATH=src python scripts/docs_lint.py`` and
+``... docs_lint.py --modules repro.agg.registry ...``.
 """
 from __future__ import annotations
 
 import importlib
+import inspect
 import pathlib
 import re
 import sys
@@ -74,10 +81,56 @@ def lint_file(path: pathlib.Path) -> List[str]:
     return errors
 
 
+def audit_module(modname: str) -> List[str]:
+    """All docstring-contract failures for one python module.
+
+    The contract (the ``repro.agg`` acceptance bar): the module exports
+    a sorted, duplicate-free ``__all__``; every exported symbol has a
+    docstring; every exported *function* with parameters documents them
+    under an ``Args:`` section and its result under ``Returns:``.
+    """
+    errors: List[str] = []
+    try:
+        mod = importlib.import_module(modname)
+    except Exception as e:
+        return [f"{modname}: import failed: {e}"]
+    exported = getattr(mod, "__all__", None)
+    if not exported:
+        return [f"{modname}: missing __all__"]
+    if list(exported) != sorted(set(exported)):
+        errors.append(f"{modname}: __all__ unsorted or duplicated")
+    for name in exported:
+        obj = getattr(mod, name, None)
+        if obj is None:
+            errors.append(f"{modname}.{name}: in __all__ but missing")
+            continue
+        doc = inspect.getdoc(obj)
+        if not doc:
+            errors.append(f"{modname}.{name}: no docstring")
+            continue
+        if inspect.isfunction(obj):
+            params = [p for p in
+                      inspect.signature(obj).parameters.values()
+                      if p.name != "self"]
+            if params and "Args:" not in doc:
+                errors.append(f"{modname}.{name}: no Args: section")
+            if "Returns:" not in doc:
+                errors.append(f"{modname}.{name}: no Returns: section")
+    return errors
+
+
 def main(argv: List[str]) -> int:
+    failures: List[str] = []
+    if argv and argv[0] == "--modules":
+        mods = argv[1:]
+        for m in mods:
+            failures.extend(audit_module(m))
+        for line in failures:
+            print(f"docs-lint: {line}", file=sys.stderr)
+        print(f"docs-lint: {len(mods)} modules, {len(failures)} failures")
+        return len(failures)
     files = [(REPO / a).resolve() for a in argv] or (
         [REPO / "README.md"] + sorted((REPO / "docs").glob("**/*.md")))
-    failures: List[str] = []
     for f in files:
         if not f.exists():
             failures.append(f"{f}: file missing")

@@ -1,0 +1,33 @@
+"""Unified aggregation-rule registry (the rule layer, end to end).
+
+Public API::
+
+    from repro.agg import resolve_rule, AggSpec, AggState, init_state
+
+    rule = resolve_rule("bulyan-krum")          # one string resolver
+    res = rule.dense_fn(grads, f)               # flat (n, d) path
+
+    rule = resolve_rule("buffered-cwmed")       # stateful history rule
+    state = init_state(rule, grads)             # zeroed AggState
+    res, state = rule.dense_fn(grads, f, state)
+
+The registry (``repro.agg.registry``) is the single dispatch point for
+every layer: ``repro.core.gars`` registers the dense rule math,
+``repro.agg.tree`` / ``repro.agg.buffered`` the tree-path and stateful
+implementations, and ``repro.dist.robust`` / ``repro.training.trainer``
+resolve by name.  ``repro.agg.specs`` merges the two historic spec
+dataclasses into :class:`AggSpec` (old import paths still work).
+"""
+from repro.agg.registry import (AggregatorRule, TreeAgg, TreeContext,
+                                quorum, register_rule, register_tree_impl,
+                                resolve_rule, rule_names)
+from repro.agg.specs import AggSpec, check_quorum
+from repro.agg.state import AggState, init_state
+from repro.agg.buffered import centered_clip_momentum, make_buffered
+
+__all__ = [
+    "AggSpec", "AggState", "AggregatorRule", "TreeAgg", "TreeContext",
+    "centered_clip_momentum", "check_quorum", "init_state",
+    "make_buffered", "quorum", "register_rule", "register_tree_impl",
+    "resolve_rule", "rule_names",
+]

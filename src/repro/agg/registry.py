@@ -1,0 +1,365 @@
+"""The unified aggregation-rule registry.
+
+Every gradient aggregation rule (GAR) in the repo — the paper's rules
+(§2.3/§4), the beyond-paper baselines, and the stateful buffered family —
+is described by one :class:`AggregatorRule` record and resolved through
+one string resolver, :func:`resolve_rule`.  The three layers that used to
+carry their own ``if gar == ...`` dispatch chains (``repro.core.gars``,
+``repro.dist.robust.distributed_aggregate``, ``repro.training.trainer``)
+all consume this registry instead:
+
+* the **dense** path calls ``rule.dense_fn(grads, f)`` on a flat
+  ``(n, d)`` matrix (``(grads, f, state)`` for stateful rules);
+* the **tree** path calls ``rule.tree_fn(ctx)`` with a
+  :class:`TreeContext` built by the sharded engine in
+  ``repro.dist.robust`` (``(ctx, state)`` for stateful rules).
+
+Composite families are resolved on demand: ``"bulyan-<base>"`` wraps the
+base rule in Bulyan's two phases (``repro.core.bulyan``) and
+``"buffered-<base>"`` wraps it with the per-worker sliding-window history
+buffer of ``repro.agg.buffered`` (Alistarh et al. 2018-style).  Resolved
+composites are cached, so repeated lookups are dict hits.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import (Any, Callable, Dict, List, NamedTuple, Optional,
+                    Sequence, Tuple)
+
+import jax.numpy as jnp
+
+__all__ = ["AggregatorRule", "TreeAgg", "TreeContext", "quorum",
+           "register_rule", "register_tree_impl", "resolve_rule",
+           "rule_names"]
+
+#: default sliding-window length of the ``buffered-*`` family
+DEFAULT_HISTORY_WINDOW = 4
+
+
+class TreeAgg(NamedTuple):
+    """Output of one tree-path rule application.
+
+    leaves:    aggregated per-parameter leaves in the compute dtype
+               (the engine casts them back to the input dtypes).
+    selected:  (n,) worker weights in the output (diagnostic).
+    scores:    (n,) per-worker rule scores (lower = better), or zeros.
+    """
+
+    leaves: List[jnp.ndarray]
+    selected: jnp.ndarray
+    scores: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeContext:
+    """Everything a tree-path rule may consume, prepared by the engine.
+
+    The sharded engine (``repro.dist.robust.distributed_aggregate``)
+    owns the expensive machinery — the distance backend dispatch
+    (xla / shard-mapped Pallas) and the windowed coordinate phase — and
+    hands it to rules through this context, so rule bodies stay
+    backend- and mesh-agnostic.
+
+    Args:
+      leaves: tuple of ``(n, *dims)`` worker-stacked gradient leaves in
+        their input dtypes (rules cast to ``cdt`` as needed).
+      n: worker count (static).
+      f: Byzantine bound (static).
+      cdt: accumulation/compute dtype (fp32 contract by default).
+      make_dists: callable mapping a leaves sequence to the ``(n, n)``
+        squared-distance matrix via the configured distance backend.
+      coordinate_phase: ``(stack, f) -> agg`` — the engine's windowed
+        Bulyan phase 2 (``coordinate_phase_nd`` with the window bound).
+    """
+
+    leaves: Tuple[jnp.ndarray, ...]
+    n: int
+    f: int
+    cdt: Any
+    make_dists: Callable[[Sequence[jnp.ndarray]], jnp.ndarray]
+    coordinate_phase: Callable[[jnp.ndarray, int], jnp.ndarray]
+
+    def dists(self) -> jnp.ndarray:
+        """Squared-distance matrix of this context's leaves.
+
+        Args:
+          (none) — operates on ``self.leaves``.
+
+        Returns:
+          ``(n, n)`` squared euclidean distances over the concatenated
+          coordinate space, in ``cdt``.
+        """
+        return self.make_dists(self.leaves)
+
+    def with_leaves(self, leaves: Sequence[jnp.ndarray]) -> "TreeContext":
+        """A copy of this context over different (same-shaped) leaves.
+
+        Args:
+          leaves: replacement worker-stacked leaves, same flat order.
+
+        Returns:
+          A new :class:`TreeContext`; ``dists()`` recomputes over the
+          new leaves through the same backend closure.
+        """
+        return dataclasses.replace(self, leaves=tuple(leaves))
+
+    def uniform(self) -> jnp.ndarray:
+        """Uniform ``(n,)`` selection weights ``1/n`` in ``cdt``.
+
+        Args:
+          (none).
+
+        Returns:
+          ``(n,)`` array of ``1/n``.
+        """
+        return jnp.full((self.n,), 1.0 / self.n, self.cdt)
+
+    def zeros(self) -> jnp.ndarray:
+        """All-zero ``(n,)`` score vector in ``cdt``.
+
+        Args:
+          (none).
+
+        Returns:
+          ``(n,)`` zeros.
+        """
+        return jnp.zeros((self.n,), self.cdt)
+
+    def take_worker(self, i) -> List[jnp.ndarray]:
+        """Select one worker's row from every leaf (traced index).
+
+        Args:
+          i: traced or static worker index.
+
+        Returns:
+          List of ``(*dims,)`` leaves in ``cdt``.
+        """
+        return [jnp.take(leaf, i, axis=0).astype(self.cdt)
+                for leaf in self.leaves]
+
+    def weighted_sum(self, weights: jnp.ndarray) -> List[jnp.ndarray]:
+        """Per-leaf ``<weights, workers>`` contraction.
+
+        The ``(n,)`` weights stay tiny and replicated; each leaf
+        contracts its own worker axis, preserving leaf sharding.
+
+        Args:
+          weights: ``(n,)`` worker weights.
+
+        Returns:
+          List of ``(*dims,)`` combined leaves in ``cdt``.
+        """
+        w = weights.astype(self.cdt)
+        return [jnp.tensordot(w, leaf.astype(self.cdt), axes=(0, 0))
+                for leaf in self.leaves]
+
+
+@dataclasses.dataclass
+class AggregatorRule:
+    """One registered aggregation rule (dense + tree implementations).
+
+    name:       canonical registry key (e.g. ``"krum"``).
+    min_n:      minimal worker count as a function of f (paper §2.3/§4).
+    dense_fn:   flat-path callable ``(grads: (n, d), f) -> AggResult``
+                (stateful: ``(grads, f, state) -> (AggResult, state)``).
+    tree_fn:    tree-path callable ``(ctx: TreeContext) -> TreeAgg``
+                (stateful: ``(ctx, state) -> (TreeAgg, state)``);
+                ``None`` when the rule has no distributed form.
+    byzantine_resilient: True when proven (alpha, f)-resilient.
+    stateful:   True when the rule threads an ``AggState``.
+    state_fields: which ``AggState`` fields the rule uses
+                (subset of ``("history", "center")``).
+    history_window: sliding-window length for history-buffered rules.
+    doc:        one-line human description.
+    """
+
+    name: str
+    min_n: Callable[[int], int]
+    dense_fn: Optional[Callable] = None
+    tree_fn: Optional[Callable] = None
+    byzantine_resilient: bool = True
+    stateful: bool = False
+    state_fields: Tuple[str, ...] = ()
+    history_window: Optional[int] = None
+    doc: str = ""
+
+    @property
+    def fn(self) -> Callable:
+        """Back-compat alias for the pre-registry ``GarSpec.fn`` slot.
+
+        Args:
+          (none) — property.
+
+        Returns:
+          The dense-path callable.
+        """
+        return self.dense_fn
+
+
+#: name -> AggregatorRule for every statically registered rule
+RULES: Dict[str, AggregatorRule] = {}
+
+#: tree implementations that arrived before (or after) their dense side —
+#: registration is order-independent across the contributing modules
+_TREE_IMPLS: Dict[str, Callable] = {}
+
+#: (name, history_window) -> AggregatorRule cache for resolved composites
+_COMPOSITES: Dict[Tuple[str, int], AggregatorRule] = {}
+
+_POPULATED = False
+
+
+def register_rule(name: str, *, min_n: Callable[[int], int],
+                  byzantine_resilient: bool = True, stateful: bool = False,
+                  state_fields: Tuple[str, ...] = (), doc: str = ""):
+    """Decorator registering a dense-path rule implementation.
+
+    Args:
+      name: registry key; must be unique.
+      min_n: minimal worker count as a function of f.
+      byzantine_resilient: True when the rule is proven resilient.
+      stateful: True when the dense fn threads an ``AggState``.
+      state_fields: ``AggState`` fields the rule uses.
+      doc: one-line description for listings.
+
+    Returns:
+      A decorator that records the function as ``dense_fn`` and returns
+      it unchanged.
+    """
+    def deco(fn):
+        if name in RULES:
+            raise ValueError(f"rule {name!r} registered twice")
+        RULES[name] = AggregatorRule(
+            name=name, min_n=min_n, dense_fn=fn,
+            tree_fn=_TREE_IMPLS.get(name),
+            byzantine_resilient=byzantine_resilient, stateful=stateful,
+            state_fields=state_fields, doc=doc or (fn.__doc__ or "").strip()
+            .split("\n")[0])
+        return fn
+    return deco
+
+
+def register_tree_impl(name: str):
+    """Decorator attaching a tree-path implementation to a rule.
+
+    Order-independent with respect to the dense side: if the dense rule
+    is not registered yet (the contributing modules import each other),
+    the implementation is parked and attached when it arrives.
+
+    Args:
+      name: key of the rule the implementation belongs to.
+
+    Returns:
+      A decorator that records the function as ``tree_fn`` and returns
+      it unchanged.
+    """
+    def deco(fn):
+        _TREE_IMPLS[name] = fn
+        if name in RULES:
+            RULES[name].tree_fn = fn
+        return fn
+    return deco
+
+
+def _populate() -> None:
+    """Import the modules whose import side effect fills the registry."""
+    global _POPULATED
+    if _POPULATED:
+        return
+    _POPULATED = True
+    import repro.core.gars      # noqa: F401  dense rules
+    import repro.agg.tree       # noqa: F401  tree-path implementations
+    import repro.agg.buffered   # noqa: F401  stateful rules
+
+
+def _bulyan_rule(name: str) -> AggregatorRule:
+    from functools import partial
+
+    from repro.agg.tree import bulyan_tree
+    from repro.core.bulyan import make_bulyan
+    base = name.split("-", 1)[1] if "-" in name else "krum"
+    # the distributed phase 1 works from distances alone, so only
+    # distance-only bases get a tree implementation
+    tree_fn = (partial(bulyan_tree, base=base)
+               if base in ("krum", "geomed") else None)
+    return AggregatorRule(
+        name=name, min_n=lambda f: 4 * f + 3, dense_fn=make_bulyan(base),
+        tree_fn=tree_fn, byzantine_resilient=True,
+        doc=f"Bulyan({base}) — recursive selection + trimmed "
+            f"coordinate phase")
+
+
+def _buffered_rule(name: str, window: int) -> AggregatorRule:
+    from repro.agg.buffered import make_buffered
+    base = name.split("-", 1)[1] if "-" in name else "cwmed"
+    base_rule = resolve_rule(base)
+    if base_rule.stateful:
+        raise KeyError(
+            f"buffered-* needs a stateless base rule, got {base!r}")
+    return make_buffered(name, base_rule, window)
+
+
+def resolve_rule(name: str,
+                 history_window: Optional[int] = None) -> AggregatorRule:
+    """Resolve a rule name to its :class:`AggregatorRule` record.
+
+    This is the single string->rule resolver every layer dispatches
+    through.  Plain names hit the static registry; ``"bulyan-<base>"``
+    and ``"buffered-<base>"`` build (and cache) composite rules.
+
+    Args:
+      name: rule name — a registered key, ``"bulyan-<base>"``, or
+        ``"buffered-<base>"`` (bases may nest, e.g.
+        ``"buffered-bulyan-krum"``).
+      history_window: sliding-window length for ``buffered-*`` rules
+        (``None`` = :data:`DEFAULT_HISTORY_WINDOW`; ignored otherwise).
+
+    Returns:
+      The resolved :class:`AggregatorRule`.  Raises ``KeyError`` for
+      unknown names.
+    """
+    _populate()
+    if name in RULES:
+        return RULES[name]
+    window = (DEFAULT_HISTORY_WINDOW if history_window is None
+              else int(history_window))
+    key = (name, window)
+    if key in _COMPOSITES:
+        return _COMPOSITES[key]
+    if name.startswith("bulyan"):
+        rule = _bulyan_rule(name)
+    elif name.startswith("buffered"):
+        rule = _buffered_rule(name, window)
+    else:
+        raise KeyError(
+            f"unknown GAR {name!r}; have {sorted(RULES)} plus "
+            f"'bulyan-<base>' and 'buffered-<base>'")
+    _COMPOSITES[key] = rule
+    return rule
+
+
+def rule_names() -> List[str]:
+    """Names of every statically registered rule (composites excluded).
+
+    Args:
+      (none).
+
+    Returns:
+      Sorted list of registry keys; ``bulyan-<base>`` / ``buffered-<base>``
+      resolve on top of these via :func:`resolve_rule`.
+    """
+    _populate()
+    return sorted(RULES)
+
+
+def quorum(name: str, f: int) -> int:
+    """Minimal worker count for a rule at a given Byzantine bound.
+
+    Args:
+      name: any name :func:`resolve_rule` accepts.
+      f: Byzantine bound.
+
+    Returns:
+      The smallest n the rule supports for this f.
+    """
+    return resolve_rule(name).min_n(f)

@@ -1,0 +1,133 @@
+"""The unified Byzantine-protocol spec and the shared quorum check.
+
+``repro.training.trainer.ByzantineSpec`` (single-host flat path) and
+``repro.dist.train.DistByzantineSpec`` (sharded path) used to be two
+near-duplicate dataclasses with three diverging quorum error messages
+(the third lived in ``repro.dist.robust._check_quorum``).  They are now
+one spec type, :class:`AggSpec`, kept importable under both old names,
+and one checker, :func:`check_quorum`, used by every layer.
+
+All fields are keyword-only (every call site in the repo already was),
+so the two historic field orders can no longer conflict.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.agg.registry import resolve_rule
+
+__all__ = ["AggSpec", "check_quorum"]
+
+
+@dataclasses.dataclass(frozen=True, kw_only=True)
+class AggSpec:
+    """Static configuration of the Byzantine training protocol.
+
+    One spec drives both runtimes: the single-host trainer reads
+    ``n_workers`` from the spec, while the sharded train step takes the
+    worker count from the batch's leading axis at trace time and leaves
+    ``n_workers`` unset.  ``f`` is both the number of injected Byzantine
+    workers and the bound the aggregation rule defends against
+    (``declared_f`` overrides the latter).
+
+    Fields beyond the shared core:
+      agg_dtype / distance_backend — the sharded path's accumulation
+        dtype contract and (n, n)-distance implementation (see
+        ``repro.dist.robust``); the flat path ignores them.
+      history_window — sliding-window length of ``buffered-*`` rules.
+      seed — PRNG seed for in-graph attack noise on the sharded path.
+    """
+
+    f: int
+    n_workers: Optional[int] = None
+    gar: str = "bulyan-krum"
+    attack: str = "none"
+    attack_kwargs: tuple = ()          # (("gamma", 10.0), ...)
+    declared_f: Optional[int] = None   # f the master *assumes* (>= actual)
+    agg_dtype: str = "native"          # native | float32 | bfloat16
+    distance_backend: str = "auto"     # auto | xla | pallas
+    history_window: int = 4            # buffered-* window length
+    seed: int = 0
+
+    @property
+    def n_honest(self) -> int:
+        """Honest worker count (requires ``n_workers``)."""
+        if self.n_workers is None:
+            raise ValueError("n_honest needs n_workers set on the spec")
+        return self.n_workers - self.f
+
+    @property
+    def f_declared(self) -> int:
+        """The bound the master aggregates with (defaults to ``f``)."""
+        return self.declared_f if self.declared_f is not None else self.f
+
+    def rule(self):
+        """Resolve this spec's GAR through the registry.
+
+        Args:
+          (none) — reads ``gar`` and ``history_window``.
+
+        Returns:
+          The resolved ``AggregatorRule``.
+        """
+        return resolve_rule(self.gar, history_window=self.history_window)
+
+    def validate(self, n_workers: Optional[int] = None) -> None:
+        """Quorum-check this spec (both historic call forms).
+
+        Args:
+          n_workers: worker count to check against.  ``None`` falls back
+            to ``self.n_workers`` (the single-host form
+            ``spec.validate()``).  Passing it explicitly is the sharded
+            trace-time form (historic ``DistByzantineSpec.validate``),
+            which additionally requires the rule to have a distributed
+            (tree) implementation — e.g. ``bulyan-brute`` is valid on
+            the flat path but rejected here.
+
+        Returns:
+          None.  Raises ``KeyError`` for an unknown rule (or, on the
+          sharded form, a rule without a tree implementation) and
+          ``ValueError`` for a quorum violation or a missing count.
+        """
+        n = self.n_workers if n_workers is None else n_workers
+        if n is None:
+            raise ValueError(
+                "validate() needs n_workers — set it on the spec or pass "
+                "it explicitly")
+        check_quorum(self.gar, n, self.f_declared,
+                     distributed=n_workers is not None,
+                     history_window=self.history_window)
+
+
+def check_quorum(gar: str, n: int, f: int, *, distributed: bool = False,
+                 history_window: Optional[int] = None) -> None:
+    """The one quorum check every layer shares.
+
+    Args:
+      gar: rule name (resolved through the registry — raises ``KeyError``
+        with the canonical "unknown GAR" message for unknown names).
+      n: worker count.
+      f: declared Byzantine bound.
+      distributed: when True, additionally require a tree-path
+        implementation (e.g. distributed Bulyan only supports the
+        distance-only bases krum/geomed), raising ``KeyError`` like the
+        old ``dist.robust._check_quorum`` did.
+      history_window: forwarded to ``resolve_rule`` for buffered rules.
+
+    Returns:
+      None.  Raises ``ValueError`` as ``"{gar} requires n >= {need} for
+      f={f}, got n={n}"`` when the quorum is violated — the single
+      message all three layers now agree on.
+    """
+    rule = resolve_rule(gar, history_window=history_window)
+    if distributed and rule.tree_fn is None:
+        if gar.startswith("bulyan") or "-bulyan" in gar:
+            raise KeyError(
+                f"distributed bulyan needs a distance-only base "
+                f"(krum/geomed), got {gar!r}")
+        raise KeyError(f"{gar!r} has no distributed (tree) implementation")
+    need = rule.min_n(f)
+    if n < need:
+        raise ValueError(
+            f"{gar} requires n >= {need} for f={f}, got n={n}")

@@ -1,0 +1,90 @@
+"""Explicit aggregation state for stateful rules.
+
+Stateless rules (everything the paper benchmarks) carry no state and pay
+nothing: the trainer/step builders only thread an :class:`AggState` when
+``resolve_rule(gar).stateful`` is True, so the jitted step signature of
+stateless runs is unchanged.
+
+The state is a plain pytree (a NamedTuple of arrays / tuples of arrays),
+so it jits, shards, and donates like any other carry:
+
+* ``step``     — int32 scalar, number of aggregations absorbed so far;
+* ``history``  — the ``buffered-*`` sliding-window buffer: for the dense
+  path one ``(W, n, d)`` array, for the tree path a tuple of
+  ``(W, n, *dims)`` leaves in the flat order of the gradient tree;
+* ``center``   — the momentum-carried center of
+  ``centered_clip_momentum``: ``(d,)`` dense, tuple of ``(*dims,)``
+  leaves on the tree path.
+
+Unused fields stay ``()`` (an empty pytree), so a rule only allocates
+the buffers its ``state_fields`` declare.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.agg.registry import AggregatorRule
+
+__all__ = ["AggState", "init_state"]
+
+
+class AggState(NamedTuple):
+    """Carried state of a stateful aggregation rule (a jit-able pytree).
+
+    step:     () int32 — aggregations absorbed so far.
+    history:  sliding-window gradient buffer(s), or ``()``.
+    center:   momentum-carried center leaves, or ``()``.
+    """
+
+    step: jnp.ndarray
+    history: Any = ()
+    center: Any = ()
+
+
+def init_state(rule: AggregatorRule, template: Any,
+               flat: "bool | None" = None) -> AggState:
+    """Zero-initialized :class:`AggState` for one rule and gradient shape.
+
+    Args:
+      rule: the resolved rule; ``rule.state_fields`` selects which
+        buffers to allocate and ``rule.history_window`` their window.
+      template: the worker-stacked gradients the rule will see — either
+        a flat ``(n, d)`` array (dense path) or a pytree of
+        ``(n, *dims)`` leaves (tree path).  Only shapes are read, so
+        ``jax.ShapeDtypeStruct`` trees work (and keep ``jax.eval_shape``
+        usable for abstract initialization).
+      flat: layout of the buffers — True for the dense path (buffers are
+        single arrays), False for the tree path (buffers are tuples of
+        per-leaf arrays, the layout ``rule.tree_fn`` consumes).  The
+        default infers it from ``template``: a bare array means dense.
+        Pass ``flat=False`` explicitly when feeding a *bare-array
+        pytree* to ``distributed_aggregate`` (which does so itself when
+        it self-initializes).
+
+    Returns:
+      An :class:`AggState` with ``step = 0`` and fp32 zero buffers for
+      exactly the fields in ``rule.state_fields``; a stateless rule gets
+      ``AggState(0, (), ())``.
+    """
+    leaves = jax.tree_util.tree_leaves(template)
+    dense = (flat if flat is not None
+             else len(leaves) == 1 and leaves[0] is template)
+    history: Any = ()
+    center: Any = ()
+    if "history" in rule.state_fields:
+        w = rule.history_window
+        if not w or w < 1:
+            raise ValueError(
+                f"rule {rule.name!r} needs a positive history_window, "
+                f"got {w!r}")
+        bufs = [jnp.zeros((w,) + leaf.shape, jnp.float32)
+                for leaf in leaves]
+        history = bufs[0] if dense else tuple(bufs)
+    if "center" in rule.state_fields:
+        cs = [jnp.zeros(leaf.shape[1:], jnp.float32) for leaf in leaves]
+        center = cs[0] if dense else tuple(cs)
+    return AggState(step=jnp.zeros((), jnp.int32), history=history,
+                    center=center)

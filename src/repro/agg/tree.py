@@ -1,0 +1,110 @@
+"""Tree-path implementations of the stateless aggregation rules.
+
+These are the bodies that used to live inline in the ``if gar == ...``
+chain of ``repro.dist.robust.distributed_aggregate``.  Each consumes a
+``TreeContext`` prepared by that engine (leaves with a leading worker
+axis, a lazy distance-matrix closure over the configured backend, the
+windowed coordinate phase) and returns a ``TreeAgg`` — so the rule
+bodies stay mesh- and backend-agnostic while the engine keeps owning
+the sharded machinery.
+
+Registered via ``@register_tree_impl`` onto the dense rules declared in
+``repro.core.gars``; the Bulyan family is attached by the resolver
+(``repro.agg.registry``) since its bases are parametric.  The stateful
+rules (buffered history, momentum centered-clip) live in
+``repro.agg.buffered``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.agg.registry import TreeAgg, TreeContext, register_tree_impl
+from repro.core import bulyan as bulyan_lib
+from repro.core import gars
+
+__all__ = ["bulyan_tree"]
+
+
+@register_tree_impl("average")
+def _average_tree(ctx: TreeContext) -> TreeAgg:
+    return TreeAgg([jnp.mean(l.astype(ctx.cdt), axis=0)
+                    for l in ctx.leaves], ctx.uniform(), ctx.zeros())
+
+
+@register_tree_impl("cwmed")
+def _cwmed_tree(ctx: TreeContext) -> TreeAgg:
+    return TreeAgg([jnp.median(l.astype(ctx.cdt), axis=0)
+                    for l in ctx.leaves], ctx.uniform(), ctx.zeros())
+
+
+@register_tree_impl("trimmed_mean")
+def _trimmed_mean_tree(ctx: TreeContext) -> TreeAgg:
+    agg = [jnp.mean(jnp.sort(l.astype(ctx.cdt), axis=0)[ctx.f:ctx.n - ctx.f],
+                    axis=0) for l in ctx.leaves]
+    return TreeAgg(agg, ctx.uniform(), ctx.zeros())
+
+
+@register_tree_impl("krum")
+def _krum_tree(ctx: TreeContext) -> TreeAgg:
+    scores = gars.krum_scores(ctx.dists(), jnp.ones((ctx.n,), bool),
+                              ctx.f, ctx.n)
+    i = jnp.argmin(scores)
+    return TreeAgg(ctx.take_worker(i), jax.nn.one_hot(i, ctx.n,
+                                                      dtype=ctx.cdt), scores)
+
+
+@register_tree_impl("geomed")
+def _geomed_tree(ctx: TreeContext) -> TreeAgg:
+    scores = gars.geomed_scores(ctx.dists(), jnp.ones((ctx.n,), bool))
+    i = jnp.argmin(scores)
+    return TreeAgg(ctx.take_worker(i), jax.nn.one_hot(i, ctx.n,
+                                                      dtype=ctx.cdt), scores)
+
+
+@register_tree_impl("multikrum")
+def _multikrum_tree(ctx: TreeContext) -> TreeAgg:
+    scores = gars.krum_scores(ctx.dists(), jnp.ones((ctx.n,), bool),
+                              ctx.f, ctx.n)
+    m = max(1, ctx.n - ctx.f - 2)
+    _, top = jax.lax.top_k(-scores, m)
+    selected = jnp.zeros((ctx.n,), ctx.cdt).at[top].set(1.0 / m)
+    return TreeAgg(ctx.weighted_sum(selected), selected, scores)
+
+
+@register_tree_impl("brute")
+def _brute_tree(ctx: TreeContext) -> TreeAgg:
+    n, f = ctx.n, ctx.f
+    dist2 = ctx.dists()
+    diam = gars.brute_subset_diameters(dist2, n, f)
+    idx = jnp.asarray(gars._subsets(n, n - f))
+    best = jnp.argmin(diam)
+    chosen = idx[best]
+    selected = jnp.zeros((n,), ctx.cdt).at[chosen].set(1.0 / (n - f))
+    member = jnp.zeros((len(idx), n), bool).at[
+        jnp.arange(len(idx))[:, None], idx].set(True)
+    scores = jnp.min(jnp.where(member, diam[:, None], jnp.inf), axis=0)
+    return TreeAgg(ctx.weighted_sum(selected), selected, scores)
+
+
+def bulyan_tree(ctx: TreeContext, base: str = "krum") -> TreeAgg:
+    """Distributed Bulyan(base) for the distance-only bases (krum/geomed).
+
+    Phase 1 runs on the (n, n) distance matrix alone
+    (``select_indices_from_dists``); phase 2 is the engine's windowed
+    coordinate phase, applied per leaf so each leaf keeps its sharding.
+
+    Args:
+      ctx: the engine-prepared tree context.
+      base: phase-1 base rule, ``"krum"`` or ``"geomed"`` (bound by the
+        resolver when building ``bulyan-<base>`` composites).
+
+    Returns:
+      A ``TreeAgg`` whose ``selected`` marks the theta = n - 2f
+      phase-1 picks with weight 1.0.
+    """
+    idx = bulyan_lib.select_indices_from_dists(ctx.dists(), ctx.f, base=base)
+    agg = [ctx.coordinate_phase(jnp.take(l.astype(ctx.cdt), idx, axis=0),
+                                ctx.f) for l in ctx.leaves]
+    selected = jnp.zeros((ctx.n,), ctx.cdt).at[idx].set(1.0)
+    return TreeAgg(agg, selected, ctx.zeros())

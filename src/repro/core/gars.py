@@ -12,6 +12,10 @@ returning the chosen index given a pairwise squared-distance matrix and a
 validity mask — these helpers are what Bulyan's recursive phase consumes
 (see ``repro.core.bulyan``) and what the distributed runtime reuses on
 all-reduced partial distance matrices (see ``repro.dist.robust``).
+
+Each rule registers itself with the unified registry (``repro.agg``) via
+``@register_rule``; ``get_gar`` / ``quorum`` below are thin wrappers over
+``repro.agg.registry.resolve_rule`` kept for the historic import path.
 """
 from __future__ import annotations
 
@@ -23,7 +27,9 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.types import AggResult, GarSpec
+from repro.agg.registry import RULES, register_rule, resolve_rule
+from repro.agg.registry import quorum as _registry_quorum
+from repro.core.types import AggResult
 
 _INF = jnp.inf
 
@@ -115,6 +121,8 @@ def brute_subset_diameters(dist2: jnp.ndarray, n: int, f: int) -> jnp.ndarray:
 # the GARs themselves
 # ---------------------------------------------------------------------------
 
+@register_rule("average", min_n=lambda f: 1, byzantine_resilient=False,
+               doc="arithmetic mean (not Byzantine-resilient)")
 def average(grads: jnp.ndarray, f: int = 0) -> AggResult:
     """Arithmetic mean — the non-robust reference (paper Fig. 2/3)."""
     n = grads.shape[0]
@@ -122,6 +130,8 @@ def average(grads: jnp.ndarray, f: int = 0) -> AggResult:
     return AggResult(jnp.mean(grads, axis=0), w, jnp.zeros((n,), grads.dtype))
 
 
+@register_rule("krum", min_n=lambda f: 2 * f + 3,
+               doc="Blanchard et al. 2017")
 def krum(grads: jnp.ndarray, f: int) -> AggResult:
     """Krum (Blanchard et al., 2017): output the vector with the smallest
     sum of squared distances to its n - f - 2 nearest neighbours."""
@@ -136,6 +146,8 @@ def krum(grads: jnp.ndarray, f: int) -> AggResult:
     return AggResult(grads[i], sel, scores)
 
 
+@register_rule("multikrum", min_n=lambda f: 2 * f + 3,
+               doc="average of m best Krum scores")
 def multikrum(grads: jnp.ndarray, f: int, m: Optional[int] = None) -> AggResult:
     """Multi-Krum: average of the m best-scored vectors (m = n - f - 2 by
     default).  Beyond-paper baseline (from the Krum paper)."""
@@ -150,6 +162,8 @@ def multikrum(grads: jnp.ndarray, f: int, m: Optional[int] = None) -> AggResult:
     return AggResult(sel @ grads, sel, scores)
 
 
+@register_rule("geomed", min_n=lambda f: 2 * f + 1,
+               doc="medoid with smallest index")
 def geomed(grads: jnp.ndarray, f: int = 0) -> AggResult:
     """GeoMed — the Medoid with the smallest index (paper §2.3.3)."""
     n = grads.shape[0]
@@ -160,6 +174,8 @@ def geomed(grads: jnp.ndarray, f: int = 0) -> AggResult:
     return AggResult(grads[i], sel, scores)
 
 
+@register_rule("brute", min_n=lambda f: 2 * f + 1,
+               doc="min-diameter subset average (small n only)")
 def brute(grads: jnp.ndarray, f: int) -> AggResult:
     """Brute (paper §2.3.1): average of the most clumped (n-f)-subset,
     i.e. the subset minimizing its max pairwise distance."""
@@ -180,6 +196,8 @@ def brute(grads: jnp.ndarray, f: int) -> AggResult:
     return AggResult(agg, sel, scores)
 
 
+@register_rule("cwmed", min_n=lambda f: 2 * f + 1,
+               doc="coordinate-wise median")
 def cwmed(grads: jnp.ndarray, f: int = 0) -> AggResult:
     """Coordinate-wise median (Yin et al., 2018) — beyond-paper baseline."""
     n = grads.shape[0]
@@ -188,6 +206,8 @@ def cwmed(grads: jnp.ndarray, f: int = 0) -> AggResult:
                      jnp.zeros((n,), grads.dtype))
 
 
+@register_rule("trimmed_mean", min_n=lambda f: 2 * f + 1,
+               doc="coordinate-wise trimmed mean")
 def trimmed_mean(grads: jnp.ndarray, f: int) -> AggResult:
     """Coordinate-wise f-trimmed mean (Yin et al., 2018) — beyond-paper."""
     n = grads.shape[0]
@@ -199,6 +219,8 @@ def trimmed_mean(grads: jnp.ndarray, f: int) -> AggResult:
                      jnp.zeros((n,), grads.dtype))
 
 
+@register_rule("centered_clip", min_n=lambda f: 2 * f + 1,
+               doc="iterative centered clipping")
 def centered_clip(grads: jnp.ndarray, f: int, tau: float = 10.0,
                   iters: int = 3) -> AggResult:
     """Centered clipping (Karimireddy et al., 2021) — beyond-paper baseline.
@@ -220,45 +242,25 @@ def centered_clip(grads: jnp.ndarray, f: int, tau: float = 10.0,
 
 
 # ---------------------------------------------------------------------------
-# registry
+# registry (now a view onto repro.agg.registry)
 # ---------------------------------------------------------------------------
 
-REGISTRY = {
-    "average": GarSpec("average", average, lambda f: 1, False,
-                       "arithmetic mean (not Byzantine-resilient)"),
-    "krum": GarSpec("krum", krum, lambda f: 2 * f + 3, True,
-                    "Blanchard et al. 2017"),
-    "multikrum": GarSpec("multikrum", multikrum, lambda f: 2 * f + 3, True,
-                         "average of m best Krum scores"),
-    "geomed": GarSpec("geomed", geomed, lambda f: 2 * f + 1, True,
-                      "medoid with smallest index"),
-    "brute": GarSpec("brute", brute, lambda f: 2 * f + 1, True,
-                     "min-diameter subset average (small n only)"),
-    "cwmed": GarSpec("cwmed", cwmed, lambda f: 2 * f + 1, True,
-                     "coordinate-wise median"),
-    "trimmed_mean": GarSpec("trimmed_mean", trimmed_mean,
-                            lambda f: 2 * f + 1, True,
-                            "coordinate-wise trimmed mean"),
-    "centered_clip": GarSpec("centered_clip", centered_clip,
-                             lambda f: 2 * f + 1, True,
-                             "iterative centered clipping"),
-}
+#: historic alias — the live rule table of ``repro.agg.registry``; entries
+#: are ``AggregatorRule`` records whose ``.fn`` property preserves the old
+#: ``GarSpec.fn`` access pattern.
+REGISTRY = RULES
 
 
 def get_gar(name: str):
-    """Resolve a GAR by name.  ``bulyan-<base>`` builds Bulyan(base)."""
-    if name.startswith("bulyan"):
-        from repro.core.bulyan import make_bulyan  # circular-safe
-        base = name.split("-", 1)[1] if "-" in name else "krum"
-        return make_bulyan(base)
-    if name not in REGISTRY:
-        raise KeyError(f"unknown GAR {name!r}; have {sorted(REGISTRY)} "
-                       f"plus 'bulyan-<base>'")
-    return REGISTRY[name].fn
+    """Resolve a GAR by name through the unified registry.
+
+    ``bulyan-<base>`` builds Bulyan(base); ``buffered-<base>`` resolves
+    to the *stateful* dense fn ``(grads, f, state) -> (AggResult, state)``
+    (see ``repro.agg``).
+    """
+    return resolve_rule(name).dense_fn
 
 
 def quorum(name: str, f: int) -> int:
-    """Minimal n for a rule at a given f."""
-    if name.startswith("bulyan"):
-        return 4 * f + 3
-    return REGISTRY[name].min_n(f)
+    """Minimal n for a rule at a given f (delegates to ``repro.agg``)."""
+    return _registry_quorum(name, f)

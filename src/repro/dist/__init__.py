@@ -8,11 +8,12 @@ production path:
   mesh.py      device meshes (host smoke meshes + the production pods)
   sharding.py  NamedSharding/PartitionSpec rules for params, optimizer
                state, worker-stacked batches, and KV caches
-  robust.py    tree-aware robust aggregation: per-leaf partial Gram
-               matrices (the (n, n) distance matrix is the only global
-               object), the distance_backend= xla/pallas/auto dispatch
-               (shard-mapped Pallas kernel on the sharded path),
-               windowed coordinate phase, per-leaf attacks
+  robust.py    the tree-aware aggregation *engine*: per-leaf partial
+               Gram matrices (the (n, n) distance matrix is the only
+               global object), the distance_backend= xla/pallas/auto
+               dispatch (shard-mapped Pallas kernel on the sharded
+               path), windowed coordinate phase, per-leaf attacks —
+               rule bodies resolve through the ``repro.agg`` registry
   train.py     the jit-able sharded Byzantine train step
   serve.py     prefill/decode steps consumed by the dry-run and engine
 
@@ -31,13 +32,14 @@ from repro.dist.robust import (DistAggResult, coordinate_phase_nd,
                                resolve_distance_backend)
 from repro.dist.sharding import (batch_pspec, cache_shardings, gram_pspec,
                                  param_shardings)
-from repro.dist.train import DistByzantineSpec, make_loss_fn, make_train_step
+from repro.dist.train import (DistByzantineSpec, init_agg_state,
+                              make_loss_fn, make_train_step)
 from repro.dist.serve import make_prefill_step, make_serve_step
 
 __all__ = [
     "DistAggResult", "DistByzantineSpec", "batch_pspec", "cache_shardings",
     "coordinate_phase_nd", "distributed_aggregate", "gram_pspec",
-    "inject_byzantine", "make_host_mesh", "make_loss_fn",
+    "init_agg_state", "inject_byzantine", "make_host_mesh", "make_loss_fn",
     "make_prefill_step", "make_production_mesh", "make_serve_step",
     "make_train_step", "mesh_axis_sizes", "pairwise_sq_dists_tree",
     "param_shardings", "resolve_distance_backend",

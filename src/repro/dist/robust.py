@@ -18,6 +18,12 @@ carry a leading worker axis and exploits the structure of the rules:
     windowing over the flattened trailing dims to bound the O(theta * d)
     sort workspace.
 
+This module is the *engine* only: the rule bodies themselves live behind
+the unified registry (``repro.agg`` — tree implementations in
+``repro.agg.tree`` / ``repro.agg.buffered``), and
+``distributed_aggregate`` hands them the machinery below through a
+``TreeContext``.
+
 Accumulation dtype: the flat reference casts everything to fp32
 (``repro.core.pytree.stack_flatten``), so the default here is fp32 too —
 bf16 gradients are aggregated in fp32 and cast back.  ``agg_dtype=
@@ -47,14 +53,13 @@ distance-based GAR, and it has two interchangeable implementations behind
 from __future__ import annotations
 
 import math
+from functools import partial
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import bulyan as bulyan_lib
-from repro.core import gars
 from repro.kernels.pairwise_gram import (finalize_dists,
                                          pairwise_gram_partial,
                                          pairwise_gram_tree)
@@ -292,52 +297,30 @@ def coordinate_phase_nd(selected: jnp.ndarray, f: int,
 
 
 # ---------------------------------------------------------------------------
-# the dispatcher
+# the engine: registry rules over the sharded distance/coordinate machinery
 # ---------------------------------------------------------------------------
-
-def _take_worker(leaves, i, cdt):
-    """Per-leaf row selection (traced index)."""
-    return [jnp.take(leaf, i, axis=0).astype(cdt) for leaf in leaves]
-
-
-def _weighted_sum(leaves, weights, cdt):
-    """Per-leaf <weights, workers> contraction — (n,) weights stay tiny
-    and replicated; each leaf contracts its own worker axis."""
-    return [jnp.tensordot(weights.astype(cdt), leaf.astype(cdt), axes=(0, 0))
-            for leaf in leaves]
-
-
-def _check_quorum(name: str, n: int, f: int) -> None:
-    if name.startswith("bulyan"):
-        base = name.split("-", 1)[1] if "-" in name else "krum"
-        # the distributed phase 1 works from distances alone
-        if base not in ("krum", "geomed"):
-            raise KeyError(
-                f"distributed bulyan needs a distance-only base "
-                f"(krum/geomed), got {name!r}")
-    elif name not in gars.REGISTRY:
-        raise KeyError(f"unknown GAR {name!r}; have {sorted(gars.REGISTRY)} "
-                       f"plus 'bulyan-<base>'")
-    need = gars.quorum(name, f)
-    if n < need:
-        raise ValueError(
-            f"{name} requires n >= {need} for f={f}, got n={n}")
-
 
 def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
                           agg_dtype: str = "native",
                           window: Optional[int] = None,
-                          distance_backend: str = "auto", mesh=None
-                          ) -> Tuple[Any, DistAggResult]:
+                          distance_backend: str = "auto", mesh=None,
+                          state=None, history_window: Optional[int] = None):
     """Apply GAR ``gar`` across the leading worker axis of a stacked
     gradient pytree, leaf-wise (semantics contract: equals the flat core
     rule on ``stack_flatten`` of the same tree, see tests/test_dist.py).
 
+    The rule is resolved through the unified registry (``repro.agg``);
+    this function only owns the sharded machinery — the distance-backend
+    dispatch and the windowed coordinate phase — and hands it to the
+    rule's tree implementation through a ``TreeContext``.
+
     Args:
       tree: pytree of ``(n, *dims)`` worker-stacked gradients.
       f: Byzantine bound the rule defends against (quorum-checked).
-      gar: rule name from ``repro.core.gars.REGISTRY`` plus
-        ``"bulyan-<base>"`` for distance-only bases (krum/geomed).
+      gar: any name ``repro.agg.resolve_rule`` accepts with a tree
+        implementation — the registered rules, ``"bulyan-<base>"`` for
+        distance-only bases (krum/geomed), and stateful
+        ``"buffered-<base>"`` / ``"centered_clip_momentum"``.
       agg_dtype: ``"native"`` (fp32) | ``"float32"`` | ``"bfloat16"`` —
         the accumulation dtype contract (see module docstring).
       window: coordinate-phase window for bulyan rules (see
@@ -346,101 +329,52 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
         (n, n) distance matrix of distance-based rules is computed (see
         ``pairwise_sq_dists_tree``; non-distance rules ignore it).
       mesh: optional device mesh for the shard-mapped Pallas path.
+      state: carried ``AggState`` for stateful rules (``None``
+        zero-initializes one in-graph); stateless rules ignore it.
+      history_window: ``buffered-*`` sliding-window length (``None`` =
+        registry default).
 
     Returns:
-      ``(aggregated pytree, DistAggResult)``; the aggregate's leaves keep
-      their input dtypes.
+      ``(aggregated pytree, DistAggResult)`` for stateless rules, and
+      ``(aggregated pytree, DistAggResult, new_state)`` for stateful
+      ones — so stateless callers keep the historic two-tuple.  The
+      aggregate's leaves keep their input dtypes.
     """
+    from repro.agg.registry import TreeContext, resolve_rule
+    from repro.agg.specs import check_quorum
+    from repro.agg.state import init_state
+
     n = _worker_count(tree)
-    _check_quorum(gar, n, f)
+    rule = resolve_rule(gar, history_window=history_window)
+    check_quorum(gar, n, f, distributed=True,
+                 history_window=history_window)
     cdt = _compute_dtype(agg_dtype)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     out_dtypes = [leaf.dtype for leaf in leaves]
-    uniform = jnp.full((n,), 1.0 / n, cdt)
-    zeros_n = jnp.zeros((n,), cdt)
-    scores = zeros_n
 
-    def dists():
-        return pairwise_sq_dists_tree(tree, cdt,
+    def make_dists(ls):
+        t = jax.tree_util.tree_unflatten(treedef, list(ls))
+        return pairwise_sq_dists_tree(t, cdt,
                                       distance_backend=distance_backend,
                                       mesh=mesh)
 
-    if gar == "average":
-        agg = [jnp.mean(l.astype(cdt), axis=0) for l in leaves]
-        selected = uniform
-    elif gar == "cwmed":
-        agg = [jnp.median(l.astype(cdt), axis=0) for l in leaves]
-        selected = uniform
-    elif gar == "trimmed_mean":
-        agg = [jnp.mean(jnp.sort(l.astype(cdt), axis=0)[f:n - f], axis=0)
-               for l in leaves]
-        selected = uniform
-    elif gar in ("krum", "geomed", "multikrum"):
-        dist2 = dists()
-        mask = jnp.ones((n,), bool)
-        if gar == "geomed":
-            scores = gars.geomed_scores(dist2, mask)
-        else:
-            scores = gars.krum_scores(dist2, mask, f, n)
-        if gar == "multikrum":
-            m = max(1, n - f - 2)
-            _, top = jax.lax.top_k(-scores, m)
-            selected = jnp.zeros((n,), cdt).at[top].set(1.0 / m)
-            agg = _weighted_sum(leaves, selected, cdt)
-        else:
-            i = jnp.argmin(scores)
-            selected = jax.nn.one_hot(i, n, dtype=cdt)
-            agg = _take_worker(leaves, i, cdt)
-    elif gar == "brute":
-        dist2 = dists()
-        diam = gars.brute_subset_diameters(dist2, n, f)
-        idx = jnp.asarray(gars._subsets(n, n - f))
-        best = jnp.argmin(diam)
-        chosen = idx[best]
-        selected = jnp.zeros((n,), cdt).at[chosen].set(1.0 / (n - f))
-        agg = _weighted_sum(leaves, selected, cdt)
-        member = jnp.zeros((len(idx), n), bool).at[
-            jnp.arange(len(idx))[:, None], idx].set(True)
-        scores = jnp.min(jnp.where(member, diam[:, None], jnp.inf), axis=0)
-    elif gar == "centered_clip":
-        agg, selected = _centered_clip_tree(leaves, n, cdt)
-    elif gar.startswith("bulyan"):
-        base = gar.split("-", 1)[1] if "-" in gar else "krum"
-        dist2 = dists()
-        idx = bulyan_lib.select_indices_from_dists(dist2, f, base=base)
-        agg = [coordinate_phase_nd(
-            jnp.take(l.astype(cdt), idx, axis=0), f, window=window)
-            for l in leaves]
-        selected = jnp.zeros((n,), cdt).at[idx].set(1.0)
-    else:  # pragma: no cover — _check_quorum already rejected unknowns
-        raise KeyError(f"unsupported distributed GAR {gar!r}")
+    ctx = TreeContext(
+        leaves=tuple(leaves), n=n, f=f, cdt=cdt, make_dists=make_dists,
+        coordinate_phase=partial(coordinate_phase_nd, window=window))
+
+    if rule.stateful:
+        if state is None:
+            state = init_state(rule, tree, flat=False)
+        out, new_state = rule.tree_fn(ctx, state)
+    else:
+        out = rule.tree_fn(ctx)
 
     agg_tree = jax.tree_util.tree_unflatten(
-        treedef, [a.astype(dt) for a, dt in zip(agg, out_dtypes)])
-    return agg_tree, DistAggResult(selected, scores)
-
-
-def _centered_clip_tree(leaves, n: int, cdt, tau: float = 10.0,
-                        iters: int = 3):
-    """Tree-wise centered clipping: the per-worker deviation norm is the
-    *global* norm across leaves (matching the flat reference)."""
-    leaves = [l.astype(cdt) for l in leaves]  # once, not per iteration
-    v0 = tuple(jnp.mean(l, axis=0) for l in leaves)
-
-    def body(_, v):
-        deltas = [l - vi[None] for l, vi in zip(leaves, v)]
-        norm2 = jnp.zeros((n,), cdt)
-        for dlt in deltas:
-            norm2 = norm2 + jnp.sum(dlt * dlt, axis=_trailing_axes(dlt))
-        norm = jnp.sqrt(norm2)
-        scale = jnp.minimum(1.0, tau / jnp.maximum(norm, 1e-12))
-        return tuple(
-            vi + jnp.mean(dlt * scale.reshape((n,) + (1,) * (dlt.ndim - 1)),
-                          axis=0)
-            for vi, dlt in zip(v, deltas))
-
-    v = jax.lax.fori_loop(0, iters, body, v0)
-    return list(v), jnp.full((n,), 1.0 / n, cdt)
+        treedef, [a.astype(dt) for a, dt in zip(out.leaves, out_dtypes)])
+    res = DistAggResult(out.selected, out.scores)
+    if rule.stateful:
+        return agg_tree, res, new_state
+    return agg_tree, res
 
 
 # ---------------------------------------------------------------------------

@@ -15,53 +15,48 @@ The single-host flat-matrix reference lives in ``repro.training.trainer``.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Optional
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
+from repro.agg.specs import AggSpec
+from repro.agg.state import init_state
 from repro.dist.robust import distributed_aggregate, inject_byzantine
 from repro.models import forward
 from repro.models.config import ModelConfig
 from repro.optim import Optimizer
 
-__all__ = ["DistByzantineSpec", "make_loss_fn", "make_train_step"]
+__all__ = ["DistByzantineSpec", "init_agg_state", "make_loss_fn",
+           "make_train_step"]
+
+#: deprecation alias — the sharded spec is now the unified
+#: ``repro.agg.AggSpec`` (same fields plus the single-host ones);
+#: ``spec.validate(n_workers)`` keeps its historic trace-time call form.
+DistByzantineSpec = AggSpec
 
 
-@dataclasses.dataclass(frozen=True)
-class DistByzantineSpec:
-    """Static configuration of the distributed Byzantine protocol.
+def init_agg_state(spec: AggSpec, params, n_workers: int):
+    """Zeroed ``AggState`` for a stateful GAR on the sharded path.
 
-    ``f`` is both the number of injected Byzantine workers and the bound
-    the aggregation rule defends against (``declared_f`` overrides the
-    latter).  The worker count is taken from the batch's leading axis at
-    trace time; the quorum check runs then.
+    Args:
+      spec: the protocol spec (``gar`` / ``history_window`` select the
+        rule and its window).
+      params: the parameter pytree (or a ``ShapeDtypeStruct`` tree —
+        only shapes are read, so this composes with ``jax.eval_shape``).
+      n_workers: worker count, the leading axis of the gradient stacks.
 
-    ``distance_backend`` selects the (n, n) pairwise-distance
-    implementation of distance-based GARs: ``"xla"`` (tensordot, GSPMD),
-    ``"pallas"`` (the tiled kernel — shard-mapped when ``make_train_step``
-    is given a mesh) or ``"auto"`` (pallas only on TPU *with* a
-    model-parallel mesh threaded through, xla otherwise).  See
-    ``repro.dist.robust.resolve_distance_backend``.
+    Returns:
+      An ``AggState`` sized for per-worker gradient stacks of
+      ``params``'s shapes, or ``None`` when the rule is stateless.
     """
-
-    f: int
-    gar: str = "bulyan-krum"
-    attack: str = "none"
-    attack_kwargs: tuple = ()          # (("gamma", 10.0), ...)
-    agg_dtype: str = "native"          # native | float32 | bfloat16
-    distance_backend: str = "auto"     # auto | xla | pallas
-    declared_f: Optional[int] = None
-    seed: int = 0
-
-    @property
-    def f_declared(self) -> int:
-        return self.declared_f if self.declared_f is not None else self.f
-
-    def validate(self, n_workers: int) -> None:
-        from repro.dist.robust import _check_quorum
-        _check_quorum(self.gar, n_workers, self.f_declared)
+    rule = spec.rule()
+    if not rule.stateful:
+        return None
+    template = jax.tree_util.tree_map(
+        lambda p: jax.ShapeDtypeStruct((n_workers,) + tuple(p.shape),
+                                       p.dtype), params)
+    return init_state(rule, template, flat=False)
 
 
 def make_loss_fn(cfg: ModelConfig, impl: str = "auto") -> Callable:
@@ -90,8 +85,15 @@ def _global_norm(tree) -> jnp.ndarray:
 def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
                     optimizer: Optimizer, impl: str = "auto",
                     mesh=None) -> Callable:
-    """Build ``step(params, opt_state, batch) -> (params, opt_state,
-    metrics)``.
+    """Build the jit-able sharded Byzantine train step.
+
+    Stateless GARs get the historic signature ``step(params, opt_state,
+    batch) -> (params, opt_state, metrics)``; when ``spec.gar`` resolves
+    to a stateful rule (``buffered-*`` / ``centered_clip_momentum``) the
+    step becomes ``step(params, opt_state, batch, agg_state) ->
+    (params, opt_state, metrics, agg_state)`` with the ``AggState``
+    carried by the caller (see ``init_agg_state``) — stateless runs pay
+    nothing.
 
     batch: ``{"tokens", "labels"[, "extra"]}`` with a leading worker axis
     ``(n_workers, per_worker_batch, ...)`` on every entry.  All n workers
@@ -106,8 +108,9 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
     """
     loss_fn = make_loss_fn(cfg, impl)
     vg = jax.value_and_grad(loss_fn)
+    stateful = spec.rule().stateful
 
-    def step(params, opt_state, batch):
+    def run_step(params, opt_state, batch, agg_state):
         tokens, labels = batch["tokens"], batch["labels"]
         extra = batch.get("extra")
         n = tokens.shape[0]
@@ -130,9 +133,12 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
             grads = inject_byzantine(grads, f, spec.attack, key=key,
                                      step=opt_state["step"], **akw)
 
-        agg, res = distributed_aggregate(
+        out = distributed_aggregate(
             grads, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
-            distance_backend=spec.distance_backend, mesh=mesh)
+            distance_backend=spec.distance_backend, mesh=mesh,
+            state=agg_state, history_window=spec.history_window)
+        agg, res = out[0], out[1]
+        new_agg_state = out[2] if stateful else None
         new_params, new_state = optimizer.update(agg, opt_state, params)
 
         honest_mean = jax.tree_util.tree_map(
@@ -146,6 +152,12 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
             "byz_weight": (jnp.sum(res.selected[n_h:]) if f > 0
                            else jnp.zeros((), jnp.float32)),
         }
-        return new_params, new_state, metrics
+        return new_params, new_state, metrics, new_agg_state
+
+    if stateful:
+        return run_step
+
+    def step(params, opt_state, batch):
+        return run_step(params, opt_state, batch, None)[:3]
 
     return step

@@ -135,7 +135,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     from repro.configs import get_config, get_reduced, shape_applicable
     from repro.dist.mesh import make_production_mesh
     from repro.dist.serve import make_prefill_step, make_serve_step
-    from repro.dist.train import DistByzantineSpec, make_train_step
+    from repro.dist.train import (DistByzantineSpec, init_agg_state,
+                                  make_train_step)
     from repro.launch import specs as S
     from repro.models.config import INPUT_SHAPES
     from repro.optim import get_optimizer
@@ -191,9 +192,20 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                      agg_dtype=agg_dtype,
                                      distance_backend=distance_backend)
             step = make_train_step(cfg, spec, opt, impl=impl, mesh=mesh)
-            jitted = jax.jit(step, donate_argnums=(0, 1),
-                             out_shardings=(param_sh, opt_sh, None))
-            lowered = jitted.lower(params, opt_state, inputs)
+            if spec.rule().stateful:
+                # abstract AggState: eval_shape keeps the (W, n, ...)
+                # history buffers as structs — nothing is materialized
+                n_workers = inputs["tokens"].shape[0]
+                agg_state = jax.eval_shape(
+                    lambda: init_agg_state(spec, params, n_workers))
+                jitted = jax.jit(step, donate_argnums=(0, 1),
+                                 out_shardings=(param_sh, opt_sh, None,
+                                                None))
+                lowered = jitted.lower(params, opt_state, inputs, agg_state)
+            else:
+                jitted = jax.jit(step, donate_argnums=(0, 1),
+                                 out_shardings=(param_sh, opt_sh, None))
+                lowered = jitted.lower(params, opt_state, inputs)
         elif shape.kind == "prefill":
             step = make_prefill_step(cfg, impl=impl)
             jitted = jax.jit(step)

@@ -1,4 +1,5 @@
 from repro.training.trainer import (ByzantineSpec, ByzantineTrainer,
-                                    make_byzantine_step)
+                                    init_flat_agg_state, make_byzantine_step)
 
-__all__ = ["ByzantineSpec", "ByzantineTrainer", "make_byzantine_step"]
+__all__ = ["ByzantineSpec", "ByzantineTrainer", "init_flat_agg_state",
+           "make_byzantine_step"]

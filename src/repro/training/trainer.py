@@ -6,46 +6,61 @@ adversary reads them and fabricates f Byzantine submissions; the master
 aggregates with a GAR and updates the model.  Everything happens in-graph
 (the adversary included) so a training step is one jit'd call.
 
+The aggregation rule is resolved through the unified registry
+(``repro.agg``); stateful rules (``buffered-*``,
+``centered_clip_momentum``) thread an explicit ``AggState`` through the
+step and the trainer loop, while stateless rules keep the historic
+signatures untouched.
+
 The mesh-sharded production variant lives in ``repro.dist.train`` — this
 module is the semantics reference it is tested against.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, Optional, Tuple
+import math
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.agg.specs import AggSpec
+from repro.agg.state import init_state
 from repro.core import attacks as attacks_lib
-from repro.core import gars as gars_lib
 from repro.core import pytree as pt
 from repro.optim import Optimizer
 
+#: deprecation alias — the single-host spec is now the unified
+#: ``repro.agg.AggSpec``; ``spec.validate()`` keeps reading
+#: ``spec.n_workers`` as before.
+ByzantineSpec = AggSpec
 
-@dataclasses.dataclass(frozen=True)
-class ByzantineSpec:
-    n_workers: int                  # total n = honest + byzantine
-    f: int                          # byzantine count (and GAR's bound)
-    gar: str = "bulyan-krum"
-    attack: str = "none"
-    attack_kwargs: tuple = ()       # (("gamma", 10.0), ...)
-    declared_f: Optional[int] = None  # f the master *assumes* (>= actual)
 
-    @property
-    def n_honest(self) -> int:
-        return self.n_workers - self.f
+def init_flat_agg_state(spec: AggSpec, params,
+                        n_rows: Optional[int] = None):
+    """Zeroed ``AggState`` for a stateful GAR on the flat (n, d) path.
 
-    @property
-    def f_declared(self) -> int:
-        return self.declared_f if self.declared_f is not None else self.f
+    Args:
+      spec: the protocol spec; ``n_workers`` must be set (the flat path
+        stacks all n submissions into one matrix).
+      params: the parameter pytree — only the total coordinate count is
+        read.
+      n_rows: row count of the stacked matrix the rule will see —
+        ``n_workers`` under attack, ``n_honest`` in clean mode
+        (``None`` infers it from the spec's attack configuration).
 
-    def validate(self) -> None:
-        need = gars_lib.quorum(self.gar, self.f_declared)
-        if self.n_workers < need:
-            raise ValueError(
-                f"{self.gar} needs n >= {need} for f={self.f_declared}, "
-                f"got n={self.n_workers}")
+    Returns:
+      An ``AggState`` sized for the ``(n_rows, d)`` stacked matrix, or
+      ``None`` when the rule is stateless.
+    """
+    rule = spec.rule()
+    if not rule.stateful:
+        return None
+    if n_rows is None:
+        n_rows = (spec.n_workers if spec.f > 0 and spec.attack != "none"
+                  else spec.n_honest)
+    d = sum(math.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    template = jax.ShapeDtypeStruct((n_rows, d), jnp.float32)
+    return init_state(rule, template, flat=True)
 
 
 def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
@@ -56,14 +71,15 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
     loss_fn(params, x, y) -> scalar loss.
     batch: x (n_honest, b, ...), y (n_honest, b, ...) — per-honest-worker.
     Returns step(params, opt_state, x, y, key) ->
-        (params, opt_state, metrics dict).
+        (params, opt_state, metrics dict); a stateful GAR appends an
+    ``agg_state`` argument and return slot (carried by the caller).
     """
     spec.validate()
-    gar = gars_lib.get_gar(spec.gar)
+    rule = spec.rule()
     attack = attacks_lib.get_attack(spec.attack) if attack_on else None
     akw = dict(spec.attack_kwargs)
 
-    def step(params, opt_state, x, y, key):
+    def run_step(params, opt_state, x, y, key, agg_state):
         grad_fn = jax.grad(loss_fn)
         worker_grads = jax.vmap(lambda xi, yi: grad_fn(params, xi, yi))(x, y)
         flat, ctx = pt.stack_flatten(worker_grads)      # (n_honest, d)
@@ -79,7 +95,10 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
             full = flat
         n_eff = full.shape[0]
 
-        res = gar(full, spec.f_declared)
+        if rule.stateful:
+            res, agg_state = rule.dense_fn(full, spec.f_declared, agg_state)
+        else:
+            res = rule.dense_fn(full, spec.f_declared)
         agg = pt.unflatten(res.gradient, ctx)
         new_params, new_state = optimizer.update(agg, opt_state, params)
 
@@ -91,13 +110,29 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
             "agg_dev": jnp.linalg.norm(res.gradient - honest_mean),
             "grad_norm": jnp.linalg.norm(res.gradient),
         }
-        return new_params, new_state, metrics
+        return new_params, new_state, metrics, agg_state
+
+    if rule.stateful:
+        return run_step
+
+    def step(params, opt_state, x, y, key):
+        return run_step(params, opt_state, x, y, key, None)[:3]
 
     return step
 
 
 class ByzantineTrainer:
-    """Convenience loop: data -> jit step -> metrics history."""
+    """Convenience loop: data -> jit step -> metrics history.
+
+    For stateful GARs the trainer owns the ``AggState``
+    (``self.agg_state``), zero-initialized at construction and carried
+    across ``run`` calls — the caller's loop stays unchanged.  When
+    ``attack_until`` flips the protocol from attacked (n rows) to clean
+    (n - f rows), per-worker history buffers no longer match the
+    submission count and are re-initialized — the clean committee
+    starts a fresh window; row-count-independent state (the
+    ``centered_clip_momentum`` center) survives the flip.
+    """
 
     def __init__(self, loss_fn, params, optimizer: Optimizer,
                  spec: ByzantineSpec, seed: int = 0):
@@ -105,6 +140,10 @@ class ByzantineTrainer:
         self.params = params
         self.optimizer = optimizer
         self.opt_state = optimizer.init(params)
+        self._rule = spec.rule()
+        self._stateful = self._rule.stateful
+        self._attack_mode = spec.f > 0 and spec.attack != "none"
+        self.agg_state = init_flat_agg_state(spec, params)
         self._step_attacked = jax.jit(
             make_byzantine_step(loss_fn, optimizer, spec, attack_on=True))
         self._step_clean = jax.jit(
@@ -119,12 +158,23 @@ class ByzantineTrainer:
             x, y = batcher.batch(t)
             self.key, sub = jax.random.split(self.key)
             attacked = (attack_until is None) or (t < attack_until)
-            fn = self._step_attacked if (attacked and self.spec.f > 0
-                                         and self.spec.attack != "none"
-                                         ) else self._step_clean
-            self.params, self.opt_state, m = fn(
-                self.params, self.opt_state, jnp.asarray(x), jnp.asarray(y),
-                sub)
+            use_attack = (attacked and self.spec.f > 0
+                          and self.spec.attack != "none")
+            fn = self._step_attacked if use_attack else self._step_clean
+            if self._stateful and use_attack != self._attack_mode:
+                self._attack_mode = use_attack
+                if "history" in self._rule.state_fields:
+                    rows = (self.spec.n_workers if use_attack
+                            else self.spec.n_honest)
+                    self.agg_state = init_flat_agg_state(
+                        self.spec, self.params, n_rows=rows)
+            args = (self.params, self.opt_state, jnp.asarray(x),
+                    jnp.asarray(y), sub)
+            if self._stateful:
+                self.params, self.opt_state, m, self.agg_state = fn(
+                    *args, self.agg_state)
+            else:
+                self.params, self.opt_state, m = fn(*args)
             rec = {k: float(v) for k, v in m.items()}
             rec["step"] = t
             if eval_fn and eval_every and t % eval_every == 0:
