@@ -22,7 +22,8 @@ def main() -> None:
 
     from benchmarks import (fig2_mnist_attack, fig3_cifar_attack,
                             fig45_bulyan_defense, fig6_bulyan_cost,
-                            gar_throughput, leeway_scaling, roofline)
+                            gar_throughput, leeway_scaling, roofline,
+                            serve_robust)
 
     steps2 = 400 if args.full else 120
     steps3 = 200 if args.full else 50
@@ -35,6 +36,7 @@ def main() -> None:
         ("gar_throughput_dist", lambda: gar_throughput.main_dist()),
         ("gar_backends", lambda: gar_throughput.main_backends()),
         ("gar_buffered", lambda: gar_throughput.main_buffered()),
+        ("serve_robust", lambda: serve_robust.main()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
         ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),
         ("fig45", lambda: fig45_bulyan_defense.main(steps=steps45)),

@@ -1,0 +1,81 @@
+"""Robust ensemble decode throughput: tokens/sec vs replicas x rule x backend.
+
+One jit'd ``make_robust_serve_step`` call decodes a token for every slot
+on every replica and aggregates the ``(n, B, vocab)`` logits stack, so
+the measured cost is ``n`` model forwards plus one registry-rule
+application over ``B * vocab`` coordinates.  Rows compare ensemble sizes
+``n`` across {average, krum, bulyan-krum} x {xla, pallas} — off-TPU the
+pallas rows run the interpreter (a parity exercise, not a perf number,
+exactly as in ``gar_throughput.main_backends``).
+
+``derived`` reports ``tok_s`` (aggregate tokens/second across slots) and
+``agg_overhead`` — the step-time ratio against the same ensemble under
+plain ``average`` with the same backend column.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.agg import AggSpec
+from repro.dist.serve_robust import (make_robust_serve_step, replicate_cache,
+                                     replicate_params)
+from repro.models import init_cache, init_model
+from repro.models.config import ModelConfig
+
+_SLOTS = 4
+_CACHE = 64
+
+
+def _bench_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="serve-bench", arch_type="dense",
+        n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+        d_ff=256, vocab_size=512, head_dim=32,
+        ffn_act="swiglu", layer_pattern=("attn",),
+        tie_embeddings=True, param_dtype="float32",
+    )
+
+
+def _time_step(step, stacked, cache, token, pos, state, reps: int = 10
+               ) -> float:
+    out = step(stacked, cache, token, pos, state)
+    jax.block_until_ready(out[0])
+    t0 = time.time()
+    for _ in range(reps):
+        out = step(stacked, cache, token, pos, state)
+    jax.block_until_ready(out[0])
+    return 1e6 * (time.time() - t0) / reps
+
+
+def main(ns=(7, 11), gars=("average", "krum", "bulyan-krum"),
+         backends=("xla", "pallas")) -> None:
+    cfg = _bench_cfg()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    token = jnp.ones((_SLOTS, 1), jnp.int32)
+    pos = jnp.full((_SLOTS,), 3, jnp.int32)
+    for n in ns:
+        f = (n - 3) // 4
+        stacked = replicate_params(params, n, jitter=1e-3,
+                                   key=jax.random.PRNGKey(1))
+        cache = replicate_cache(init_cache(cfg, _SLOTS, _CACHE), n)
+        for backend in backends:
+            ref_us = None
+            for gar in gars:
+                spec = AggSpec(f=f, gar=gar, distance_backend=backend)
+                step = jax.jit(make_robust_serve_step(cfg, spec))
+                us = _time_step(step, stacked, cache, token, pos, None)
+                if gar == "average":
+                    ref_us = us
+                tok_s = 1e6 * _SLOTS / us
+                over = us / ref_us if ref_us else float("nan")
+                emit(f"serve_robust/{gar}_n{n}", us,
+                     f"tok_s={tok_s:.0f};agg_overhead={over:.2f}",
+                     backend=backend)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,10 @@ production path:
                rule bodies resolve through the ``repro.agg`` registry
   train.py     the jit-able sharded Byzantine train step
   serve.py     prefill/decode steps consumed by the dry-run and engine
+  serve_robust.py  Byzantine-resilient ensemble serving: replica param
+               stacks (axis mapped onto ``data``), per-token logits
+               aggregation through the ``repro.agg`` registry, AggState
+               carried across the decode stream (docs/serving.md)
 
 Everything is plain jit-compatible jnp: sharding enters exclusively via
 the input/output shardings (XLA GSPMD propagation), so the same step
@@ -30,17 +34,28 @@ from repro.dist.robust import (DistAggResult, coordinate_phase_nd,
                                distributed_aggregate, inject_byzantine,
                                pairwise_sq_dists_tree,
                                resolve_distance_backend)
-from repro.dist.sharding import (batch_pspec, cache_shardings, gram_pspec,
+from repro.dist.sharding import (batch_pspec, cache_shardings,
+                                 ensemble_cache_shardings,
+                                 ensemble_param_shardings, gram_pspec,
                                  param_shardings)
 from repro.dist.train import (DistByzantineSpec, init_agg_state,
                               make_loss_fn, make_train_step)
 from repro.dist.serve import make_prefill_step, make_serve_step
+from repro.dist.serve_robust import (aggregate_logits, init_ensemble_state,
+                                     make_robust_prefill_step,
+                                     make_robust_serve_step,
+                                     poison_replicas, replicate_cache,
+                                     replicate_params, stack_replicas)
 
 __all__ = [
-    "DistAggResult", "DistByzantineSpec", "batch_pspec", "cache_shardings",
-    "coordinate_phase_nd", "distributed_aggregate", "gram_pspec",
-    "init_agg_state", "inject_byzantine", "make_host_mesh", "make_loss_fn",
-    "make_prefill_step", "make_production_mesh", "make_serve_step",
-    "make_train_step", "mesh_axis_sizes", "pairwise_sq_dists_tree",
-    "param_shardings", "resolve_distance_backend",
+    "DistAggResult", "DistByzantineSpec", "aggregate_logits", "batch_pspec",
+    "cache_shardings", "coordinate_phase_nd", "distributed_aggregate",
+    "ensemble_cache_shardings", "ensemble_param_shardings", "gram_pspec",
+    "init_agg_state", "init_ensemble_state", "inject_byzantine",
+    "make_host_mesh", "make_loss_fn", "make_prefill_step",
+    "make_production_mesh", "make_robust_prefill_step",
+    "make_robust_serve_step", "make_serve_step", "make_train_step",
+    "mesh_axis_sizes", "pairwise_sq_dists_tree", "param_shardings",
+    "poison_replicas", "replicate_cache", "replicate_params",
+    "resolve_distance_backend", "stack_replicas",
 ]

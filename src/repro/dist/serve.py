@@ -4,6 +4,14 @@ Thin, jit-able closures over the model's prefill/decode paths — the
 sharded layout comes from ``repro.dist.sharding`` (params over ``model``,
 batch and KV caches over the data-parallel axes), applied by the caller
 via input/output shardings exactly as in ``repro.launch.dryrun``.
+
+The Byzantine-resilient *ensemble* analogues of these steps live in
+``repro.dist.serve_robust`` (``make_robust_prefill_step`` /
+``make_robust_serve_step``): there the leading replica axis of the
+stacked parameters and caches maps onto the ``data`` mesh axis
+(``repro.dist.sharding.ensemble_param_shardings`` /
+``ensemble_cache_shardings``) and the per-token logits stack is
+aggregated through the ``repro.agg`` registry.  See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -18,8 +26,18 @@ __all__ = ["make_prefill_step", "make_serve_step"]
 
 
 def make_prefill_step(cfg: ModelConfig, impl: str = "auto") -> Callable:
-    """``step(params, tokens[, extra]) -> (logits, cache)`` — full-sequence
-    forward that also populates decode caches (cache_len = seq_len)."""
+    """Build the full-sequence prefill step.
+
+    Args:
+      cfg: model configuration.
+      impl: attention implementation (``"auto"`` | ``"naive"`` |
+        ``"blockwise"``), forwarded to the model's prefill.
+
+    Returns:
+      ``prefill_step(params, tokens[, extra]) -> (logits, cache)`` — a
+      full-sequence forward that also populates decode caches
+      (``cache_len`` = sequence length).
+    """
 
     def prefill_step(params, tokens: jnp.ndarray,
                      extra: Optional[jnp.ndarray] = None):
@@ -29,10 +47,25 @@ def make_prefill_step(cfg: ModelConfig, impl: str = "auto") -> Callable:
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
-    """``step(params, cache, token, pos) -> (logits, new_cache)`` — one
-    decode token for every sequence in the batch; ``pos`` is a scalar or
-    (B,) per-slot position vector (continuous batching).  Single-token
-    decode has no attention-impl choice, hence no ``impl`` knob."""
+    """Build the single-token batched decode step.
+
+    Args:
+      cfg: model configuration.
+
+    Returns:
+      ``serve_step(params, cache, token, pos) -> (logits, new_cache)`` —
+      one decode token for every sequence in the batch.
+
+      The ``pos`` contract: either a scalar ``()`` (every sequence at
+      the same position — the dry-run decode shape) or a ``(B,)`` int32
+      per-slot position vector (continuous batching — each sequence
+      ropes and cache-writes at its own index; this is what
+      ``ServingEngine`` passes).  Host callers should keep their
+      counters int32 to match — the engine's ``positions`` array is
+      ``np.int32`` precisely so no int64 promotion crosses the
+      host/device boundary.  Single-token decode has no attention-impl
+      choice, hence no ``impl`` knob.
+    """
 
     def serve_step(params, cache, token: jnp.ndarray, pos):
         return decode_step(params, cfg, cache, token, pos)

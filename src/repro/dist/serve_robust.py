@@ -1,0 +1,356 @@
+"""Byzantine-resilient ensemble serving: robust aggregation at decode time.
+
+The paper's core claim — a single Byzantine participant exploits the
+:math:`\\Omega(\\sqrt{d})` leeway of convergent aggregation rules — applies
+to inference-time ensembles exactly as it does to training: ``n`` replica
+parameter sets (independent fine-tunes, quantized variants, or mirrored
+servers, some of which may be compromised) each produce per-token logits,
+and a master that *averages* them hands one poisoned replica control over
+every greedy decode.  This module is the serving-side analogue of
+``repro.dist.robust``:
+
+* replicas are a **stacked parameter pytree** — every leaf carries a
+  leading ``(n_replicas,)`` axis (``stack_replicas`` /
+  ``replicate_params``), which the mesh layer maps onto the ``data`` axis
+  (``repro.dist.sharding.ensemble_param_shardings``) so each replica's
+  forward runs data-parallel while its weights stay ``model``-sharded;
+* poisoning reuses the training-side machinery verbatim:
+  ``poison_replicas`` rewrites the last ``f`` replicas' *parameters*
+  through ``repro.dist.robust.inject_byzantine``, and a decode-time
+  in-graph attack on the stacked *logits* (``spec.attack``) mirrors
+  ``make_train_step``'s omniscient adversary;
+* aggregation is the unchanged ``repro.agg`` registry applied to the
+  ``(n, B, V)`` logits stack per decode step — Krum selects one replica's
+  distribution, Bulyan trims per vocabulary entry, and the stateful rules
+  (``buffered-*``, ``centered_clip_momentum``) thread an ``AggState``
+  **across tokens**, filtering slow-drift poisoning over the decode
+  stream.  Distances run through the same leaf-wise Gram machinery and
+  ``distance_backend=`` xla/pallas dispatch as training.
+
+No rule is forked for serving: ``aggregate_logits`` wraps the stack in a
+single-leaf tree and calls ``distributed_aggregate``, so every registry
+rule with a tree implementation works unchanged as a serving aggregator
+(pinned by ``tests/test_serve_robust.py``).
+
+The continuous-batching driver lives in ``repro.serving.engine``
+(``ServingEngine(..., ensemble=spec)``); see ``docs/serving.md`` for the
+architecture, including the AggState-across-tokens contract.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.agg.specs import AggSpec
+from repro.agg.state import AggState, init_state
+from repro.dist.robust import distributed_aggregate, inject_byzantine
+from repro.models import decode_step, prefill
+from repro.models.config import ModelConfig
+
+__all__ = ["aggregate_logits", "init_ensemble_state",
+           "make_robust_prefill_step", "make_robust_serve_step",
+           "poison_replicas", "replicate_cache", "replicate_params",
+           "stack_replicas"]
+
+
+# ---------------------------------------------------------------------------
+# replica parameter stacks
+# ---------------------------------------------------------------------------
+
+def stack_replicas(replicas: Sequence[Any]) -> Any:
+    """Stack per-replica parameter pytrees along a new leading axis.
+
+    Args:
+      replicas: sequence of structurally identical parameter pytrees
+        (one per ensemble member).
+
+    Returns:
+      One pytree whose every leaf is the ``(n_replicas, *dims)`` stack of
+      the corresponding per-replica leaves — the layout every function in
+      this module (and ``ServingEngine``'s ensemble mode) consumes.
+    """
+    if not replicas:
+        raise ValueError("need at least one replica")
+    return jax.tree_util.tree_map(
+        lambda *leaves: jnp.stack(leaves, axis=0), *replicas)
+
+
+def replicate_params(params: Any, n_replicas: int, *, jitter: float = 0.0,
+                     key: Optional[jax.Array] = None) -> Any:
+    """Broadcast one parameter set into an ``n_replicas``-stacked ensemble.
+
+    Args:
+      params: parameter pytree of a single model.
+      n_replicas: ensemble size (the leading axis of every output leaf).
+      jitter: per-replica Gaussian perturbation scale, relative to each
+        leaf's RMS value (``0.0`` = exact copies).  A small jitter models
+        independently fine-tuned replicas and gives distance-based rules
+        an honest cluster to select from.
+      key: PRNG key for the jitter (``None`` = ``PRNGKey(0)``); ignored
+        when ``jitter == 0``.
+
+    Returns:
+      A pytree whose leaves are ``(n_replicas, *dims)`` stacks of the
+      input leaves, optionally jittered per replica.
+    """
+    if n_replicas < 1:
+        raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+    stacked = jax.tree_util.tree_map(
+        lambda p: jnp.broadcast_to(p[None], (n_replicas,) + p.shape), params)
+    if jitter <= 0.0:
+        return stacked
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    leaves, treedef = jax.tree_util.tree_flatten(stacked)
+    out = []
+    for j, leaf in enumerate(leaves):
+        rms = jnp.sqrt(jnp.mean(jnp.square(leaf.astype(jnp.float32))) + 1e-12)
+        noise = jitter * rms * jax.random.normal(
+            jax.random.fold_in(key, j), leaf.shape, jnp.float32)
+        out.append((leaf.astype(jnp.float32) + noise).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicate_cache(cache: Any, n_replicas: int) -> Any:
+    """Grow a decode cache a leading replica axis (zero-state broadcast).
+
+    Every replica starts from the same (empty) cache, so a plain
+    broadcast is exact; from the first decode step on, each replica's
+    cache diverges with its parameters.  This is the one place the
+    ensemble cache layout (leading ``(n_replicas,)`` axis on every
+    ``periods``/``tail`` leaf) is defined — the engine, tests, and
+    benchmarks all build their stacked caches here.
+
+    Args:
+      cache: decode-cache pytree from ``repro.models.init_cache``.
+      n_replicas: ensemble size.
+
+    Returns:
+      The cache pytree with every leaf broadcast to
+      ``(n_replicas, *leaf.shape)``.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_replicas,) + x.shape), cache)
+
+
+def poison_replicas(stacked_params: Any, f: int, attack: str = "signflip",
+                    key: Optional[jax.Array] = None, **attack_kwargs) -> Any:
+    """Rewrite the last ``f`` replicas' parameters with a Byzantine attack.
+
+    This is the training-side ``repro.dist.robust.inject_byzantine``
+    applied to *parameters* instead of gradients: the adversary reads the
+    ``n - f`` honest replicas' weights and overwrites the last ``f``
+    rows of every leaf (e.g. ``"signflip"`` with a large scale produces a
+    replica whose logits are confidently wrong — the serving analogue of
+    the paper's poisoned worker).
+
+    Args:
+      stacked_params: ``(n_replicas, *dims)``-stacked parameter pytree.
+      f: number of replicas to poison (the trailing rows; ``f <= 0`` is a
+        no-op).
+      attack: any attack name ``inject_byzantine`` accepts (signflip,
+        zero, mimic, ipm, random, alie, omniscient_linf, omniscient_lp).
+      key: PRNG key for stochastic attacks.
+      **attack_kwargs: per-attack parameters forwarded verbatim (scale,
+        eps, z, gamma, ...).
+
+    Returns:
+      The stacked pytree with the last ``f`` replicas replaced; shapes
+      and dtypes preserved exactly.
+    """
+    return inject_byzantine(stacked_params, f, attack, key=key,
+                            **attack_kwargs)
+
+
+# ---------------------------------------------------------------------------
+# logits aggregation (the one entry point every serving path shares)
+# ---------------------------------------------------------------------------
+
+def aggregate_logits(logits: jnp.ndarray, f: int, gar: str, *,
+                     agg_dtype: str = "native",
+                     distance_backend: str = "auto", mesh=None,
+                     state: Optional[AggState] = None,
+                     history_window: Optional[int] = None):
+    """Aggregate a replica-stacked logits tensor through the GAR registry.
+
+    The stack is wrapped in a single-leaf tree and handed to
+    ``repro.dist.robust.distributed_aggregate``, so the coordinate space
+    is the flattened ``batch x vocab`` plane and the semantics contract
+    is the flat core rule on ``logits.reshape(n, -1)`` — no
+    serving-specific rule forks exist (see ``tests/test_serve_robust.py``
+    for the parity pin).
+
+    Args:
+      logits: ``(n_replicas, batch, vocab)`` (or ``(n_replicas, vocab)``)
+        replica-stacked logits of one decode step.
+      f: Byzantine bound the rule defends against (quorum-checked).
+      gar: any name ``repro.agg.resolve_rule`` accepts with a tree
+        implementation (``krum``, ``bulyan-<base>``, ``buffered-<base>``,
+        ``centered_clip_momentum``, ...).
+      agg_dtype: accumulation dtype contract (see ``repro.dist.robust``).
+      distance_backend: ``"xla"`` | ``"pallas"`` | ``"auto"`` for the
+        ``(n, n)`` replica-distance matrix of distance-based rules.
+      mesh: optional device mesh for the shard-mapped Pallas path.
+      state: carried ``AggState`` for stateful rules (``None``
+        zero-initializes one in-graph); stateless rules ignore it.
+      history_window: ``buffered-*`` window length (``None`` = default).
+
+    Returns:
+      ``(aggregated logits, DistAggResult)`` for stateless rules and
+      ``(aggregated logits, DistAggResult, new_state)`` for stateful
+      ones — the aggregated array drops the replica axis and keeps the
+      input dtype.
+    """
+    out = distributed_aggregate(
+        {"logits": logits}, f, gar, agg_dtype=agg_dtype,
+        distance_backend=distance_backend, mesh=mesh, state=state,
+        history_window=history_window)
+    agg = out[0]["logits"]
+    if len(out) == 3:
+        return agg, out[1], out[2]
+    return agg, out[1]
+
+
+def init_ensemble_state(spec: AggSpec, n_replicas: int, batch: int,
+                        vocab: int) -> Optional[AggState]:
+    """Zeroed ``AggState`` for a stateful serving aggregator.
+
+    The state template is the ``(n_replicas, batch, vocab)`` logits stack
+    the decode step aggregates, so window buffers come out as
+    ``(W, n_replicas, batch, vocab)`` — one history of the full slot
+    batch, carried across tokens.  Composes with ``jax.eval_shape`` (only
+    shapes are read).
+
+    Args:
+      spec: the serving ``AggSpec`` (``gar`` / ``history_window`` select
+        the rule and its window).
+      n_replicas: ensemble size.
+      batch: decode batch (the engine's slot count).
+      vocab: vocabulary size.
+
+    Returns:
+      An ``AggState`` sized for the logits stack, or ``None`` when the
+      rule is stateless.
+    """
+    rule = spec.rule()
+    if not rule.stateful:
+        return None
+    template = {"logits": jax.ShapeDtypeStruct(
+        (n_replicas, batch, vocab), jnp.float32)}
+    return init_state(rule, template, flat=False)
+
+
+# ---------------------------------------------------------------------------
+# jit-able ensemble steps
+# ---------------------------------------------------------------------------
+
+def _maybe_attack_logits(stack: jnp.ndarray, spec: AggSpec, pos) -> jnp.ndarray:
+    """Decode-time omniscient adversary on the stacked logits (in-graph)."""
+    if spec.attack == "none" or spec.f <= 0:
+        return stack
+    # fold in the *sum* of positions: under continuous batching any active
+    # slot advancing refreshes the key (pos[0] alone freezes once slot 0
+    # finishes, replaying identical noise for stochastic attacks)
+    key = jax.random.fold_in(
+        jax.random.PRNGKey(spec.seed),
+        jnp.sum(jnp.asarray(pos, jnp.int32)))
+    akw = dict(spec.attack_kwargs)
+    akw.setdefault("gar_name", spec.gar)
+    return inject_byzantine({"logits": stack}, spec.f, spec.attack,
+                            key=key, **akw)["logits"]
+
+
+def make_robust_prefill_step(cfg: ModelConfig, spec: AggSpec,
+                             cache_len: int = 0, impl: str = "auto",
+                             mesh=None) -> Callable:
+    """Build the ensemble prefill: per-replica forward + robust first token.
+
+    The returned ``prefill_step(stacked_params, tokens[, extra]) ->
+    (agg_logits, stacked_cache, diag)`` vmaps the model's prefill over
+    the replica axis (every replica sees the same prompt), then
+    aggregates the **last-position** logits ``(n, B, vocab)`` through
+    ``spec.gar`` so the first sampled token is already Byzantine-filtered.
+    Caches come back replica-stacked, ready for
+    ``make_robust_serve_step``.  Stateful rules aggregate the prefill
+    decision from a fresh zero state (the carried-state contract starts
+    on the decode stream — see docs/serving.md).
+
+    Args:
+      cfg: model configuration of every replica.
+      spec: serving ``AggSpec`` (``gar``, declared ``f``, ``agg_dtype``,
+        ``distance_backend``, ``history_window``).
+      cache_len: decode-cache length to allocate (``0`` = prompt length).
+      impl: attention implementation forwarded to prefill.
+      mesh: optional device mesh for the Pallas distance path.
+
+    Returns:
+      The jit-able ``prefill_step`` closure described above; ``diag`` is
+      the ``DistAggResult`` of the aggregation (per-replica weights and
+      scores).
+    """
+
+    def prefill_step(stacked_params, tokens: jnp.ndarray,
+                     extra: Optional[jnp.ndarray] = None):
+        logits, caches = jax.vmap(
+            lambda p: prefill(p, cfg, tokens, extra, cache_len=cache_len,
+                              impl=impl))(stacked_params)
+        stack = logits[:, :, -1, :].astype(jnp.float32)
+        out = aggregate_logits(
+            stack, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            distance_backend=spec.distance_backend, mesh=mesh,
+            history_window=spec.history_window)
+        return out[0], caches, out[1]
+
+    return prefill_step
+
+
+def make_robust_serve_step(cfg: ModelConfig, spec: AggSpec,
+                           mesh=None) -> Callable:
+    """Build the jit-able robust ensemble decode step.
+
+    The returned ``serve_step(stacked_params, stacked_cache, token, pos,
+    agg_state) -> (agg_logits, new_cache, diag, new_agg_state)`` decodes
+    one token on every replica (vmap over the leading replica axis of
+    params and cache — the same ``token``/``pos`` feed every replica),
+    optionally applies ``spec.attack`` to the stacked logits in-graph
+    (the omniscient decode-time adversary, mirroring the train step),
+    and aggregates the ``(n, B, vocab)`` stack through ``spec.gar``.
+
+    ``pos`` follows the ``make_serve_step`` contract: a scalar or a
+    ``(B,)`` int32 per-slot position vector (continuous batching).
+    ``agg_state`` is the carried ``AggState`` for stateful rules —
+    thread the returned state into the next call so ``buffered-*`` /
+    ``centered_clip_momentum`` filter across the decode stream; pass
+    (and receive) ``None`` for stateless rules, whose signature cost is
+    zero.
+
+    Args:
+      cfg: model configuration of every replica.
+      spec: serving ``AggSpec``; ``spec.attack`` ("none" to disable)
+        poisons the last ``spec.f`` replicas' logits in-graph.
+      mesh: optional device mesh for the Pallas distance path.
+
+    Returns:
+      The ``serve_step`` closure described above; ``agg_logits`` is
+      ``(B, vocab)`` with the replica axis aggregated away and ``diag``
+      the per-replica ``DistAggResult``.
+    """
+    stateful = spec.rule().stateful
+
+    def serve_step(stacked_params, stacked_cache, token: jnp.ndarray, pos,
+                   agg_state: Optional[AggState] = None):
+        logits, new_cache = jax.vmap(
+            lambda p, c: decode_step(p, cfg, c, token, pos)
+        )(stacked_params, stacked_cache)
+        stack = logits[:, :, 0, :].astype(jnp.float32)
+        stack = _maybe_attack_logits(stack, spec, pos)
+        out = aggregate_logits(
+            stack, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            distance_backend=spec.distance_backend, mesh=mesh,
+            state=agg_state, history_window=spec.history_window)
+        new_state = out[2] if stateful else None
+        return out[0], new_cache, out[1], new_state
+
+    return serve_step

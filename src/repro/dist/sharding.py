@@ -19,8 +19,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist.mesh import mesh_axis_sizes
 
-__all__ = ["LEGACY_RULES", "batch_pspec", "cache_shardings", "gram_pspec",
-           "param_shardings"]
+__all__ = ["LEGACY_RULES", "batch_pspec", "cache_shardings",
+           "ensemble_cache_shardings", "ensemble_param_shardings",
+           "gram_pspec", "param_shardings"]
 
 #: pre-iteration parameter rules (A/B baseline; see launch.dryrun)
 LEGACY_RULES = False
@@ -156,6 +157,67 @@ def gram_pspec(shape: Sequence[int], mesh, path=()) -> P:
                 spec[i] = "model"
                 break
     return P(*spec)
+
+
+def ensemble_param_shardings(tree: Any, mesh) -> Any:
+    """NamedSharding pytree for replica-stacked ensemble parameters.
+
+    The leading replica axis (``repro.dist.serve_robust`` layout) maps
+    onto ``data`` — each data slice serves a subset of replicas, the
+    serving analogue of "one worker per data slice" in training — while
+    the inner parameter dimensions follow the exact ``param_shardings``
+    rule over ``model`` (including the never-shard rule for the stacked
+    period axis).  A replica count that does not divide the ``data``
+    axis replicates, which is always correct.
+
+    Args:
+      tree: ``(n_replicas, *dims)``-stacked parameter pytree (arrays or
+        ``ShapeDtypeStruct``s — only shapes are read).
+      mesh: the device mesh.
+
+    Returns:
+      A pytree of ``NamedSharding`` with the structure of ``tree``.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    data = sizes.get("data", 1)
+    model = sizes.get("model", 1)
+
+    def spec_for(path, leaf):
+        inner = _leaf_pspec(path, leaf.shape[1:], model)
+        entries = list(inner) + [None] * (len(leaf.shape) - 1 - len(inner))
+        lead = ("data" if data > 1 and leaf.shape[0] % data == 0
+                and leaf.shape[0] >= data else None)
+        return NamedSharding(mesh, P(lead, *entries))
+
+    return jax.tree_util.tree_map_with_path(spec_for, tree)
+
+
+def ensemble_cache_shardings(cache: Any, mesh) -> Any:
+    """NamedSharding pytree for replica-stacked decode caches.
+
+    Every leaf of the ensemble cache carries a leading replica axis
+    (periods: ``(n_replicas, n_periods, B, ...)``, tail:
+    ``(n_replicas, B, ...)``); it shards over ``data`` alongside the
+    replica axis of the parameters so a replica's cache lives with its
+    weights.  Everything else stays replicated (KV heads are usually too
+    few to split the ``model`` axis, exactly as in ``cache_shardings``).
+
+    Args:
+      cache: replica-stacked decode-cache pytree.
+      mesh: the device mesh.
+
+    Returns:
+      A pytree of ``NamedSharding`` with the structure of ``cache``.
+    """
+    data = mesh_axis_sizes(mesh).get("data", 1)
+
+    def spec_for(leaf):
+        if (leaf.ndim >= 1 and data > 1 and leaf.shape[0] % data == 0
+                and leaf.shape[0] >= data):
+            return NamedSharding(mesh, P("data"))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(spec_for, cache)
 
 
 def cache_shardings(cache: Any, mesh) -> Any:

@@ -128,13 +128,18 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             distance_backend: str = "auto", unroll: bool = False,
             attn_shard: Optional[str] = None,
             logits_dtype: Optional[str] = None,
+            serve_gar: Optional[str] = None, serve_f: int = 2,
+            serve_replicas: int = 0,
             out_path: Optional[str] = None) -> Dict[str, Any]:
     import jax
     import jax.numpy as jnp
 
+    from repro.agg import quorum
     from repro.configs import get_config, get_reduced, shape_applicable
     from repro.dist.mesh import make_production_mesh
     from repro.dist.serve import make_prefill_step, make_serve_step
+    from repro.dist.serve_robust import (init_ensemble_state,
+                                         make_robust_serve_step)
     from repro.dist.train import (DistByzantineSpec, init_agg_state,
                                   make_train_step)
     from repro.launch import specs as S
@@ -213,6 +218,30 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             if "extra" in inputs:
                 args.append(inputs["extra"])
             lowered = jitted.lower(*args)
+        elif shape.kind == "decode" and serve_gar:
+            # robust ensemble decode: replica-stacked params/caches with
+            # the replica axis on ``data``, per-token logits aggregation
+            # through the registry (repro.dist.serve_robust)
+            n_rep = serve_replicas or quorum(serve_gar, serve_f)
+            sspec = DistByzantineSpec(f=serve_f, gar=serve_gar,
+                                      agg_dtype=agg_dtype,
+                                      distance_backend=distance_backend)
+            record.update(serve_gar=serve_gar, serve_f=serve_f,
+                          serve_replicas=n_rep)
+            eparams, _ = S.ensemble_param_specs(cfg, mesh, n_rep)
+            cache, cache_sh = S.ensemble_cache_specs(
+                cfg, n_rep, shape.global_batch, shape.seq_len, mesh)
+            step = make_robust_serve_step(cfg, sspec, mesh=mesh)
+            agg_state = None
+            if sspec.rule().stateful:
+                agg_state = jax.eval_shape(
+                    lambda: init_ensemble_state(sspec, n_rep,
+                                                shape.global_batch,
+                                                cfg.vocab_size))
+            jitted = jax.jit(step, donate_argnums=(1,),
+                             out_shardings=(None, cache_sh, None, None))
+            lowered = jitted.lower(eparams, cache, inputs["token"],
+                                   inputs["pos"], agg_state)
         else:  # decode
             cache, cache_sh = S.cache_specs(cfg, shape.global_batch,
                                             shape.seq_len, mesh)
@@ -302,6 +331,15 @@ def main() -> None:
                     help="pre-iteration param sharding rules (A/B baseline)")
     ap.add_argument("--logits-dtype", default=None,
                     choices=[None, "float32", "bfloat16"])
+    ap.add_argument("--serve-gar", default=None,
+                    help="robust ensemble decode: aggregate per-token "
+                         "replica logits with this GAR (decode shapes "
+                         "only; see repro.dist.serve_robust)")
+    ap.add_argument("--serve-f", type=int, default=2,
+                    help="Byzantine replica bound of --serve-gar")
+    ap.add_argument("--serve-replicas", type=int, default=0,
+                    help="ensemble size (0 = the rule's minimal quorum "
+                         "for --serve-f)")
     ap.add_argument("--attn-shard", default=None,
                     choices=[None, "none", "batch"],
                     help="attention activation sharding (see ModelConfig)")
@@ -323,7 +361,9 @@ def main() -> None:
                   param_dtype=args.param_dtype, agg_dtype=args.agg_dtype,
                   distance_backend=args.distance_backend,
                   unroll=args.unroll, attn_shard=args.attn_shard,
-                  logits_dtype=args.logits_dtype, out_path=args.out)
+                  logits_dtype=args.logits_dtype,
+                  serve_gar=args.serve_gar, serve_f=args.serve_f,
+                  serve_replicas=args.serve_replicas, out_path=args.out)
     print(json.dumps(rec, indent=1))
 
 

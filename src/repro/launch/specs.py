@@ -16,7 +16,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config, get_reduced
 from repro.dist.mesh import mesh_axis_sizes
 from repro.dist.sharding import (batch_pspec, cache_shardings,
-                                 param_shardings)
+                                 ensemble_cache_shardings,
+                                 ensemble_param_shardings, param_shardings)
 from repro.models import init_cache, init_model
 from repro.models.config import INPUT_SHAPES, ModelConfig
 from repro.models.layers import _dtype
@@ -55,6 +56,44 @@ def cache_specs(cfg: ModelConfig, batch: int, cache_len: int, mesh
     structs = jax.tree_util.tree_map(
         lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
         shapes, shardings)
+    return structs, shardings
+
+
+def _stack_structs(shapes: Any, n_replicas: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((n_replicas,) + tuple(s.shape),
+                                       s.dtype), shapes)
+
+
+def ensemble_param_specs(cfg: ModelConfig, mesh, n_replicas: int
+                         ) -> Tuple[Any, Any]:
+    """(structs, shardings) for a replica-stacked parameter ensemble.
+
+    Same eval_shape derivation as ``param_specs`` with every leaf grown a
+    leading ``(n_replicas,)`` axis, sharded by
+    ``ensemble_param_shardings`` (replica axis over ``data``, inner dims
+    over ``model``) — the layout ``repro.dist.serve_robust`` consumes.
+    """
+    shapes = jax.eval_shape(
+        lambda k: init_model(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    stacked = _stack_structs(shapes, n_replicas)
+    shardings = ensemble_param_shardings(stacked, mesh)
+    structs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        stacked, shardings)
+    return structs, shardings
+
+
+def ensemble_cache_specs(cfg: ModelConfig, n_replicas: int, batch: int,
+                         cache_len: int, mesh) -> Tuple[Any, Any]:
+    """(structs, shardings) for replica-stacked decode caches."""
+    shapes = jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+    stacked = _stack_structs(shapes, n_replicas)
+    shardings = ensemble_cache_shardings(stacked, mesh)
+    structs = jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        stacked, shardings)
     return structs, shardings
 
 

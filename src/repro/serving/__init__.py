@@ -1,3 +1,11 @@
+"""Single-host serving: the continuous-batching engine.
+
+``ServingEngine`` drives the model zoo's prefill/decode path with
+fixed-slot continuous batching; its ``ensemble=`` mode turns it into the
+Byzantine-resilient ensemble server built on ``repro.dist.serve_robust``
+(robust logits aggregation per decode step through the ``repro.agg``
+registry).  Architecture notes live in docs/serving.md.
+"""
 from repro.serving.engine import Request, ServingEngine
 
 __all__ = ["Request", "ServingEngine"]

@@ -1,5 +1,5 @@
 """Batched serving engine: fixed-slot continuous batching over the decode
-path.
+path, with an optional Byzantine-resilient ensemble mode.
 
 Slots hold independent sequences; each engine step decodes one token for
 every active slot (a single jit'd ``decode_step`` on the full batch).  New
@@ -11,11 +11,20 @@ Each slot carries its own position counter (mixed-length batching ropes
 and cache-writes per slot).  Simplifications vs a production scheduler: no
 paged KV; prefill runs at admission time on the slot's sub-batch; greedy
 sampling.
+
+**Ensemble mode** (``ensemble=AggSpec(...)``): ``params`` is a
+replica-stacked pytree (leading ``(n_replicas,)`` axis on every leaf, see
+``repro.dist.serve_robust``), caches are kept per replica, and every
+decode step aggregates the ``(n_replicas, n_slots, vocab)`` logits stack
+through the ``repro.agg`` registry before sampling — Krum/Bulyan reject a
+poisoned replica's distribution; stateful rules thread an ``AggState``
+across tokens via ``self.agg_state``.  See docs/serving.md for the
+architecture and the AggState-across-tokens contract.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -24,9 +33,17 @@ import numpy as np
 from repro.models import decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
 
+__all__ = ["Request", "ServingEngine"]
+
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: a prompt plus generation bookkeeping.
+
+    ``generated`` accumulates sampled token ids (filled by the engine);
+    ``done`` flips when ``max_new_tokens`` have been produced.
+    """
+
     rid: int
     prompt: np.ndarray           # (S0,) int32
     max_new_tokens: int
@@ -35,19 +52,57 @@ class Request:
 
 
 class ServingEngine:
+    """Fixed-slot continuous-batching engine (optionally ensemble-robust).
+
+    Plain mode: ``params`` is one parameter pytree and each step is one
+    jit'd ``decode_step`` over all slots.  Ensemble mode (``ensemble=``
+    an ``repro.agg.AggSpec``): ``params`` is a replica-stacked pytree (or
+    a list of per-replica pytrees, stacked on entry), each step decodes
+    every replica and aggregates the logits stack through
+    ``spec.gar`` before greedy sampling; ``self.agg_state`` carries the
+    ``AggState`` of stateful rules across tokens.
+
+    Host-side counters (``positions``, ``last_token``) are int32 — the
+    dtype the jit'd steps consume — so no implicit int64 promotion
+    happens at the host/device boundary.
+    """
+
     def __init__(self, params, cfg: ModelConfig, n_slots: int = 4,
-                 cache_len: int = 512, sampler: str = "greedy"):
-        self.params = params
+                 cache_len: int = 512, sampler: str = "greedy",
+                 ensemble=None, mesh=None):
         self.cfg = cfg
         self.n_slots = n_slots
         self.cache_len = cache_len
-        self.cache = init_cache(cfg, n_slots, cache_len)
-        self.positions = np.zeros((n_slots,), np.int64)
+        self.ensemble = ensemble
+        self.positions = np.zeros((n_slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * n_slots
         self.last_token = np.zeros((n_slots,), np.int32)
-        self._decode = jax.jit(
-            lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
         self.sampler = sampler
+        self.agg_state = None
+        if ensemble is None:
+            self.params = params
+            self.cache = init_cache(cfg, n_slots, cache_len)
+            self._decode = jax.jit(
+                lambda p, c, t, pos: decode_step(p, cfg, c, t, pos))
+            return
+        # -- ensemble mode ----------------------------------------------------
+        from repro.dist.serve_robust import (init_ensemble_state,
+                                             make_robust_prefill_step,
+                                             make_robust_serve_step,
+                                             replicate_cache,
+                                             stack_replicas)
+        if isinstance(params, (list, tuple)):
+            params = stack_replicas(params)
+        self.params = params
+        self.n_replicas = jax.tree_util.tree_leaves(params)[0].shape[0]
+        self.cache = replicate_cache(init_cache(cfg, n_slots, cache_len),
+                                     self.n_replicas)
+        self.agg_state = init_ensemble_state(
+            ensemble, self.n_replicas, n_slots, cfg.vocab_size)
+        self._decode = jax.jit(
+            make_robust_serve_step(cfg, ensemble, mesh=mesh))
+        self._ens_prefill = make_robust_prefill_step(
+            cfg, ensemble, cache_len=cache_len, mesh=mesh)
 
     # -- admission -----------------------------------------------------------
 
@@ -57,42 +112,76 @@ class ServingEngine:
                 return i
         return None
 
+    def _splice_cache(self, slot: int, slot_cache) -> None:
+        """Write one slot's freshly prefilled cache into the batched cache.
+
+        Period caches are stacked ``(n_periods, B, ...)``, tail caches
+        ``(B, ...)``; in ensemble mode both carry an extra leading
+        replica axis.
+        """
+        if self.ensemble is None:
+            per, tail = (lambda fl, on: fl.at[:, slot].set(on[:, 0]),
+                         lambda fl, on: fl.at[slot].set(on[0]))
+        else:
+            per, tail = (lambda fl, on: fl.at[:, :, slot].set(on[:, :, 0]),
+                         lambda fl, on: fl.at[:, slot].set(on[:, 0]))
+        self.cache = {
+            "periods": jax.tree_util.tree_map(
+                per, self.cache["periods"], slot_cache["periods"]),
+            "tail": jax.tree_util.tree_map(
+                tail, self.cache["tail"], slot_cache["tail"]),
+        }
+
     def admit(self, req: Request) -> bool:
+        """Admit one request into a free slot (returns False when full).
+
+        Runs the prompt through per-slot prefill and splices the
+        resulting cache into the batched cache.  In ensemble mode the
+        first token is already robust: the replicas' last-position
+        logits are aggregated through the configured rule (statelessly —
+        the carried-state contract starts on the decode stream).
+        """
         slot = self._free_slot()
         if slot is None:
             return False
         req.generated = []
-        # per-slot prefill: run the prompt through the model, splice the
-        # resulting cache into this slot of the batched cache
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        logits, slot_cache = prefill(self.params, self.cfg, tokens,
-                                     cache_len=self.cache_len)
-        # period caches are stacked (n_periods, B, ...), tail caches (B, ...)
-        self.cache = {
-            "periods": jax.tree_util.tree_map(
-                lambda fl, on: fl.at[:, slot].set(on[:, 0]),
-                self.cache["periods"], slot_cache["periods"]),
-            "tail": jax.tree_util.tree_map(
-                lambda fl, on: fl.at[slot].set(on[0]),
-                self.cache["tail"], slot_cache["tail"]),
-        }
+        if self.ensemble is None:
+            logits, slot_cache = prefill(self.params, self.cfg, tokens,
+                                         cache_len=self.cache_len)
+            first = int(jnp.argmax(logits[0, -1]))
+        else:
+            agg_logits, slot_cache, _ = self._ens_prefill(self.params, tokens)
+            first = int(jnp.argmax(agg_logits[0]))
+        self._splice_cache(slot, slot_cache)
         self.active[slot] = req
         self.positions[slot] = len(req.prompt)
-        self.last_token[slot] = int(jnp.argmax(logits[0, -1]))
-        req.generated.append(int(self.last_token[slot]))
+        self.last_token[slot] = first
+        req.generated.append(first)
         return True
 
     # -- one decode step across all slots -------------------------------------
 
     def step(self) -> None:
+        """Decode one token for every active slot (no-op when idle).
+
+        Ensemble mode additionally threads ``self.agg_state`` through the
+        robust step so stateful rules accumulate their history across
+        tokens.
+        """
         if not any(r is not None for r in self.active):
             return
         tokens = jnp.asarray(self.last_token)[:, None]
         # per-slot positions: each sequence ropes/writes at its own index
-        logits, self.cache = self._decode(
-            self.params, self.cache, tokens,
-            jnp.asarray(self.positions, jnp.int32))
-        nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1), np.int32)
+        pos = jnp.asarray(self.positions, jnp.int32)
+        if self.ensemble is None:
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              tokens, pos)
+            step_logits = logits[:, 0]
+        else:
+            step_logits, self.cache, _res, self.agg_state = self._decode(
+                self.params, self.cache, tokens, pos, self.agg_state)
+        nxt = np.asarray(jnp.argmax(step_logits, axis=-1), np.int32)
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -105,6 +194,12 @@ class ServingEngine:
 
     def run(self, requests: List[Request], max_steps: int = 1000
             ) -> Dict[int, List[int]]:
+        """Serve a list of requests to completion (continuous batching).
+
+        Admits pending requests whenever slots free up, steps the batch
+        until everything is done or ``max_steps`` is hit, and returns
+        ``{rid: generated tokens}``.
+        """
         pending = list(requests)
         results: Dict[int, List[int]] = {}
         for _ in range(max_steps):

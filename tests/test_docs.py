@@ -16,9 +16,11 @@ import docs_lint  # noqa: E402
 def test_front_door_exists():
     assert (REPO / "README.md").exists()
     assert (REPO / "docs" / "dist-runtime.md").exists()
+    assert (REPO / "docs" / "serving.md").exists()
 
 
-@pytest.mark.parametrize("doc", ["README.md", "docs/dist-runtime.md"])
+@pytest.mark.parametrize("doc", ["README.md", "docs/dist-runtime.md",
+                                 "docs/aggregation.md", "docs/serving.md"])
 def test_doc_lints_clean(doc):
     errors = docs_lint.lint_file(REPO / doc)
     assert not errors, "\n".join(errors)
@@ -40,16 +42,33 @@ def test_lint_catches_bad_snippet(tmp_path):
     assert any("nope.py missing" in e for e in errors)
 
 
-@pytest.mark.parametrize("pkg", ["repro.dist", "repro.kernels"])
+@pytest.mark.parametrize("pkg", ["repro.dist", "repro.kernels",
+                                 "repro.serving", "repro.dist.serve",
+                                 "repro.dist.serve_robust"])
 def test_public_symbols_documented(pkg):
     """Acceptance criterion: every public symbol exported by repro.dist
-    (and repro.kernels) carries a docstring, and __all__ is accurate."""
+    (and repro.kernels, and the serving stack) carries a docstring, and
+    __all__ is accurate."""
     import importlib
     mod = importlib.import_module(pkg)
     assert mod.__all__ == sorted(set(mod.__all__)), "unsorted/dup __all__"
     for name in mod.__all__:
         obj = getattr(mod, name)
         assert getattr(obj, "__doc__", None), f"{pkg}.{name} undocumented"
+
+
+def test_serving_doc_covers_exported_api():
+    """docs/serving.md must not drift from the serving API surface: every
+    symbol exported by repro.dist.serve_robust and repro.dist.serve (and
+    the engine's entry points) has to be mentioned by name."""
+    import importlib
+    text = (REPO / "docs" / "serving.md").read_text()
+    names = set()
+    for pkg in ("repro.dist.serve_robust", "repro.dist.serve",
+                "repro.serving"):
+        names.update(importlib.import_module(pkg).__all__)
+    missing = sorted(n for n in names if n not in text)
+    assert not missing, f"docs/serving.md misses exported API: {missing}"
 
 
 def test_changes_log_mentions_every_pr():

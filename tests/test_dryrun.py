@@ -50,6 +50,23 @@ def test_reduced_dryrun_multipod_decode():
     assert rec["multi_pod"] is True
 
 
+@pytest.mark.slow
+def test_reduced_dryrun_robust_ensemble_decode():
+    """--serve-gar: the robust ensemble decode step lowers + compiles on
+    the production mesh with the replica axis on ``data``."""
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "c.json")
+        r = _run(["--arch", "gemma3-1b", "--shape", "decode_32k",
+                  "--reduced", "--serve-gar", "bulyan-krum",
+                  "--serve-f", "1", "--serve-replicas", "7",
+                  "--out", out])
+        assert r.returncode == 0, r.stderr[-3000:]
+        rec = json.load(open(out))
+    assert rec["serve_gar"] == "bulyan-krum"
+    assert rec["serve_replicas"] == 7
+    assert rec["hlo_lines"] > 0
+
+
 def test_long_500k_skip_rules():
     from repro.configs import shape_applicable
     assert shape_applicable("mamba2-130m", "long_500k")

@@ -1,0 +1,220 @@
+"""Byzantine-resilient ensemble serving (repro.dist.serve_robust).
+
+Pins the three contracts of the serving aggregation layer:
+
+  1. semantics — aggregating an ``(n, B, V)`` logits stack equals the
+     flat core rule on ``logits.reshape(n, -1)`` (no serving forks);
+  2. robustness end-to-end — a poisoned replica flips greedy decode
+     under ``average`` and is rejected by Krum/Bulyan through the full
+     ``ServingEngine`` ensemble path;
+  3. state — stateful rules thread one ``AggState`` across decode steps
+     (dense-path parity and engine-carried threading).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import AggSpec, init_state, resolve_rule, rule_names
+from repro.configs import get_reduced
+from repro.core import get_gar
+from repro.dist.serve_robust import (aggregate_logits, init_ensemble_state,
+                                     make_robust_serve_step,
+                                     poison_replicas, replicate_cache,
+                                     replicate_params, stack_replicas)
+from repro.models import init_cache, init_model
+from repro.serving import Request, ServingEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# 1. parity with the flat core on stacked logits
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gar", ["average", "cwmed", "trimmed_mean", "krum",
+                                 "geomed", "multikrum", "centered_clip",
+                                 "bulyan-krum", "bulyan-geomed"])
+def test_aggregate_logits_matches_flat_core(gar):
+    n, B, V, f = 11, 3, 32, 2
+    logits = jax.random.normal(KEY, (n, B, V))
+    agg, res = aggregate_logits(logits, f, gar)
+    flat = get_gar(gar)(logits.reshape(n, -1), f).gradient.reshape(B, V)
+    np.testing.assert_allclose(agg, flat, rtol=1e-5, atol=1e-5)
+    assert agg.shape == (B, V)
+    assert res.selected.shape == (n,)
+
+
+def test_every_tree_rule_serves():
+    """Acceptance pin: every registry rule with a tree implementation
+    works unchanged as a serving aggregator (incl. composites and the
+    stateful family)."""
+    B, V, f = 2, 16, 1
+    names = [n for n in rule_names()
+             if resolve_rule(n).tree_fn is not None]
+    names += ["bulyan-krum", "bulyan-geomed", "buffered-cwmed",
+              "buffered-krum", "buffered-bulyan-krum"]
+    assert "krum" in names and "centered_clip_momentum" in names
+    for i, name in enumerate(names):
+        rule = resolve_rule(name)
+        n = max(rule.min_n(f), 4)
+        logits = jax.random.normal(jax.random.fold_in(KEY, i), (n, B, V))
+        if rule.stateful:
+            state = init_ensemble_state(AggSpec(f=f, gar=name), n, B, V)
+            agg, res, state = aggregate_logits(logits, f, name, state=state)
+            assert int(state.step) == 1
+        else:
+            agg, res = aggregate_logits(logits, f, name)
+        assert agg.shape == (B, V), name
+        assert bool(jnp.all(jnp.isfinite(agg))), name
+
+
+def test_stack_replicas_matches_replicate():
+    cfg = get_reduced("gemma_2b")
+    params = init_model(KEY, cfg)
+    stacked = stack_replicas([params, params, params])
+    bcast = replicate_params(params, 3)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(a, b), stacked, bcast)
+    jit = replicate_params(params, 3, jitter=1e-3, key=KEY)
+    leaf = jax.tree_util.tree_leaves(jit)[0]
+    assert leaf.shape[0] == 3
+    assert not np.allclose(leaf[0], leaf[1])
+
+
+# ---------------------------------------------------------------------------
+# 2. engine end-to-end
+# ---------------------------------------------------------------------------
+
+def _serve(stacked, cfg, gar, f, prompt, tokens=6, **ekw):
+    eng = ServingEngine(stacked, cfg, n_slots=1, cache_len=32,
+                        ensemble=AggSpec(f=f, gar=gar, **ekw))
+    return eng.run([Request(rid=0, prompt=prompt, max_new_tokens=tokens)],
+                   max_steps=20)[0]
+
+
+def test_ensemble_of_identical_replicas_matches_plain_engine():
+    cfg = get_reduced("llama3_2_3b")
+    params = init_model(KEY, cfg)
+    prompt = np.asarray([1, 2, 3, 4, 5], np.int32)
+    plain = ServingEngine(params, cfg, n_slots=1, cache_len=32)
+    want = plain.run([Request(rid=0, prompt=prompt, max_new_tokens=5)],
+                     max_steps=20)[0]
+    stacked = replicate_params(params, 4)  # power of two: exact mean
+    got = _serve(stacked, cfg, "average", 0, prompt, tokens=5)
+    assert got == want
+
+
+def test_poisoned_replica_rejected_end_to_end():
+    """Poisoned replica flips greedy argmax under average, is rejected
+    by krum and bulyan (matching the attack-free run token for token)."""
+    cfg = get_reduced("llama3_2_3b")
+    params = init_model(KEY, cfg)
+    prompt = np.asarray([1, 2, 3, 4, 5], np.int32)
+    n, f = 7, 1
+    honest = replicate_params(params, n, jitter=1e-3,
+                              key=jax.random.PRNGKey(7))
+    poisoned = poison_replicas(honest, f, "signflip", scale=10.0)
+    for gar in ("krum", "bulyan-krum"):
+        clean = _serve(honest, cfg, gar, f, prompt)
+        attacked = _serve(poisoned, cfg, gar, f, prompt)
+        assert attacked == clean, gar
+    clean_avg = _serve(honest, cfg, "average", f, prompt)
+    attacked_avg = _serve(poisoned, cfg, "average", f, prompt)
+    assert attacked_avg != clean_avg
+
+
+def test_decode_time_logits_attack_rejected():
+    """The in-graph omniscient adversary on the logits stack (spec.attack,
+    mirroring make_train_step) steers average but not bulyan."""
+    cfg = get_reduced("llama3_2_3b")
+    params = init_model(KEY, cfg)
+    prompt = np.asarray([2, 4, 6], np.int32)
+    n, f = 7, 1
+    stacked = replicate_params(params, n, jitter=1e-3,
+                               key=jax.random.PRNGKey(3))
+    akw = (("scale", 20.0),)
+    clean = _serve(stacked, cfg, "bulyan-krum", f, prompt)
+    att_bul = _serve(stacked, cfg, "bulyan-krum", f, prompt,
+                     attack="signflip", attack_kwargs=akw)
+    att_avg = _serve(stacked, cfg, "average", f, prompt,
+                     attack="signflip", attack_kwargs=akw)
+    assert att_bul == clean
+    assert att_avg != clean
+
+
+# ---------------------------------------------------------------------------
+# 3. stateful rules across the decode stream
+# ---------------------------------------------------------------------------
+
+def test_stateful_dense_tree_parity_across_steps():
+    """Threading AggState through aggregate_logits equals threading the
+    dense rule over the same flat stacks, step for step."""
+    n, B, V, f, W = 5, 2, 16, 1, 3
+    rule = resolve_rule("buffered-cwmed", history_window=W)
+    spec = AggSpec(f=f, gar="buffered-cwmed", history_window=W)
+    t_state = init_ensemble_state(spec, n, B, V)
+    d_state = init_state(rule, jnp.zeros((n, B * V)), flat=True)
+    for step in range(4):
+        logits = jax.random.normal(jax.random.fold_in(KEY, step), (n, B, V))
+        agg, _, t_state = aggregate_logits(logits, f, "buffered-cwmed",
+                                           state=t_state, history_window=W)
+        d_res, d_state = rule.dense_fn(logits.reshape(n, -1), f, d_state)
+        np.testing.assert_allclose(agg, d_res.gradient.reshape(B, V),
+                                   rtol=1e-5, atol=1e-5)
+    assert int(t_state.step) == 4
+
+
+def test_engine_threads_agg_state_across_steps():
+    cfg = get_reduced("gemma_2b")
+    params = init_model(KEY, cfg)
+    stacked = replicate_params(params, 5, jitter=1e-3, key=KEY)
+    spec = AggSpec(f=1, gar="buffered-cwmed", history_window=3)
+    eng = ServingEngine(stacked, cfg, n_slots=1, cache_len=32,
+                        ensemble=spec)
+    assert eng.agg_state is not None and int(eng.agg_state.step) == 0
+    eng.admit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                      max_new_tokens=10))
+    for _ in range(3):
+        eng.step()
+    assert int(eng.agg_state.step) == 3
+    # the ring buffer actually absorbed the decode stream
+    hist = eng.agg_state.history[0]
+    assert hist.shape[:2] == (3, 5)
+    assert bool(jnp.any(hist != 0))
+
+
+def test_robust_serve_step_carries_cache_and_state():
+    """Direct step-builder use (the dryrun path): three chained calls."""
+    cfg = get_reduced("gemma_2b")
+    params = init_model(KEY, cfg)
+    n = 5
+    stacked = replicate_params(params, n, jitter=1e-3, key=KEY)
+    cache = replicate_cache(init_cache(cfg, batch=2, cache_len=16), n)
+    spec = AggSpec(f=1, gar="centered_clip_momentum")
+    step = jax.jit(make_robust_serve_step(cfg, spec))
+    state = init_ensemble_state(spec, n, 2, cfg.vocab_size)
+    token = jnp.asarray([[1], [2]], jnp.int32)
+    for i in range(3):
+        pos = jnp.full((2,), i, jnp.int32)
+        logits, cache, res, state = step(stacked, cache, token, pos, state)
+        assert logits.shape == (2, cfg.vocab_size)
+    assert int(state.step) == 3
+
+
+# ---------------------------------------------------------------------------
+# satellites: dtype contract
+# ---------------------------------------------------------------------------
+
+def test_engine_positions_are_int32():
+    """Host-side counters must be int32 (the dtype the jit'd step takes) —
+    no int64 promotion at the host/device boundary."""
+    cfg = get_reduced("gemma_2b")
+    params = init_model(KEY, cfg)
+    eng = ServingEngine(params, cfg, n_slots=2, cache_len=32)
+    assert eng.positions.dtype == np.int32
+    eng.admit(Request(rid=0, prompt=np.asarray([1, 2, 3], np.int32),
+                      max_new_tokens=3))
+    eng.step()
+    assert eng.positions.dtype == np.int32
+    assert eng.last_token.dtype == np.int32
