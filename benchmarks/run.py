@@ -1,6 +1,7 @@
 """Benchmark harness: one module per paper table/figure plus the systems
 benches.  Prints ``name,backend,us_per_call,derived`` CSV rows — the
-``backend`` column tags distance-backend comparison rows (xla/pallas);
+``backend`` column tags distance-backend comparison rows (xla/pallas)
+and the sync-vs-async runtime rows of ``gar_async`` (sync/async);
 ``-`` marks backend-independent benches.
 
     PYTHONPATH=src python -m benchmarks.run [--quick|--full] [--only NAME]
@@ -22,13 +23,14 @@ def main() -> None:
 
     from benchmarks import (fig2_mnist_attack, fig3_cifar_attack,
                             fig45_bulyan_defense, fig6_bulyan_cost,
-                            gar_throughput, leeway_scaling, roofline,
-                            serve_robust)
+                            gar_async, gar_throughput, leeway_scaling,
+                            roofline, serve_robust)
 
     steps2 = 400 if args.full else 120
     steps3 = 200 if args.full else 50
     steps45 = 400 if args.full else 120
     steps6 = 150 if args.full else 60
+    steps_async = 120 if args.full else 60
 
     benches = [
         ("leeway", lambda: leeway_scaling.main()),
@@ -36,6 +38,7 @@ def main() -> None:
         ("gar_throughput_dist", lambda: gar_throughput.main_dist()),
         ("gar_backends", lambda: gar_throughput.main_backends()),
         ("gar_buffered", lambda: gar_throughput.main_buffered()),
+        ("gar_async", lambda: gar_async.main(steps=steps_async)),
         ("serve_robust", lambda: serve_robust.main()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
         ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),

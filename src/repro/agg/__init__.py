@@ -24,10 +24,12 @@ from repro.agg.registry import (AggregatorRule, TreeAgg, TreeContext,
 from repro.agg.specs import AggSpec, check_quorum
 from repro.agg.state import AggState, init_state
 from repro.agg.buffered import centered_clip_momentum, make_buffered
+from repro.agg.staleness import make_stale, stale_scale, stale_weights
 
 __all__ = [
     "AggSpec", "AggState", "AggregatorRule", "TreeAgg", "TreeContext",
     "centered_clip_momentum", "check_quorum", "init_state",
-    "make_buffered", "quorum", "register_rule", "register_tree_impl",
-    "resolve_rule", "rule_names",
+    "make_buffered", "make_stale", "quorum", "register_rule",
+    "register_tree_impl", "resolve_rule", "rule_names", "stale_scale",
+    "stale_weights",
 ]

@@ -15,10 +15,14 @@ all consume this registry instead:
   ``repro.dist.robust`` (``(ctx, state)`` for stateful rules).
 
 Composite families are resolved on demand: ``"bulyan-<base>"`` wraps the
-base rule in Bulyan's two phases (``repro.core.bulyan``) and
+base rule in Bulyan's two phases (``repro.core.bulyan``),
 ``"buffered-<base>"`` wraps it with the per-worker sliding-window history
-buffer of ``repro.agg.buffered`` (Alistarh et al. 2018-style).  Resolved
-composites are cached, so repeated lookups are dict hits.
+buffer of ``repro.agg.buffered`` (Alistarh et al. 2018-style), and
+``"stale-<base>"`` (``"stale-inv-"`` / ``"stale-exp-"`` select the
+weight schedule) reweights the worker stack by per-worker staleness read
+from the carried ``GradientBus`` before delegating to the base
+(``repro.agg.staleness`` — the asynchronous runtime's rule family).
+Resolved composites are cached, so repeated lookups are dict hits.
 """
 from __future__ import annotations
 
@@ -299,6 +303,20 @@ def _buffered_rule(name: str, window: int) -> AggregatorRule:
     return make_buffered(name, base_rule, window)
 
 
+def _stale_rule(name: str, window: int) -> AggregatorRule:
+    from repro.agg.staleness import make_stale
+    rest = name.split("-", 1)[1]
+    weight = "inv"
+    head = rest.split("-", 1)[0]
+    if head in ("inv", "exp") and "-" in rest:
+        weight, rest = rest.split("-", 1)
+    base_rule = resolve_rule(rest, history_window=window)
+    if "bus" in base_rule.state_fields:
+        raise KeyError(
+            f"stale-* cannot nest another stale rule, got {rest!r}")
+    return make_stale(name, base_rule, weight=weight)
+
+
 def resolve_rule(name: str,
                  history_window: Optional[int] = None) -> AggregatorRule:
     """Resolve a rule name to its :class:`AggregatorRule` record.
@@ -308,11 +326,13 @@ def resolve_rule(name: str,
     and ``"buffered-<base>"`` build (and cache) composite rules.
 
     Args:
-      name: rule name — a registered key, ``"bulyan-<base>"``, or
-        ``"buffered-<base>"`` (bases may nest, e.g.
-        ``"buffered-bulyan-krum"``).
+      name: rule name — a registered key, ``"bulyan-<base>"``,
+        ``"buffered-<base>"``, or ``"stale[-inv|-exp]-<base>"`` (bases
+        may nest, e.g. ``"buffered-bulyan-krum"``,
+        ``"stale-exp-bulyan-krum"``, ``"stale-buffered-cwmed"``).
       history_window: sliding-window length for ``buffered-*`` rules
-        (``None`` = :data:`DEFAULT_HISTORY_WINDOW`; ignored otherwise).
+        (``None`` = :data:`DEFAULT_HISTORY_WINDOW`; ignored otherwise;
+        forwarded through ``stale-*`` to a buffered base).
 
     Returns:
       The resolved :class:`AggregatorRule`.  Raises ``KeyError`` for
@@ -330,10 +350,15 @@ def resolve_rule(name: str,
         rule = _bulyan_rule(name)
     elif name.startswith("buffered"):
         rule = _buffered_rule(name, window)
+    elif name.startswith("stale-"):
+        # exact-prefix match: a dash-less "stale..." typo (or the
+        # stale_replay *attack* name passed as a GAR) must hit the
+        # unknown-name error below, not fall back to a default base
+        rule = _stale_rule(name, window)
     else:
         raise KeyError(
             f"unknown GAR {name!r}; have {sorted(RULES)} plus "
-            f"'bulyan-<base>' and 'buffered-<base>'")
+            f"'bulyan-<base>', 'buffered-<base>' and 'stale-<base>'")
     _COMPOSITES[key] = rule
     return rule
 
@@ -345,8 +370,9 @@ def rule_names() -> List[str]:
       (none).
 
     Returns:
-      Sorted list of registry keys; ``bulyan-<base>`` / ``buffered-<base>``
-      resolve on top of these via :func:`resolve_rule`.
+      Sorted list of registry keys; ``bulyan-<base>`` /
+      ``buffered-<base>`` / ``stale-<base>`` resolve on top of these
+      via :func:`resolve_rule`.
     """
     _populate()
     return sorted(RULES)

@@ -36,7 +36,18 @@ class AggSpec:
         dtype contract and (n, n)-distance implementation (see
         ``repro.dist.robust``); the flat path ignores them.
       history_window — sliding-window length of ``buffered-*`` rules.
-      seed — PRNG seed for in-graph attack noise on the sharded path.
+      seed — PRNG seed for in-graph attack noise on the sharded path
+        (and for the ``random`` async delay schedule).
+      async_tau / async_schedule — the asynchronous runtime's bounded
+        staleness: per-worker maximal slot age (an int for a homogeneous
+        bound or a tuple of per-worker bounds — heterogeneous, and
+        attacker-controllable in the sense that Byzantine workers ignore
+        it) and the deterministic delay schedule (``"fixed"`` staggered
+        round-robin | ``"random"`` bounded Bernoulli).  Only the async
+        step builders read them (``repro.dist.async_train``,
+        ``repro.training.trainer.make_async_byzantine_step``);
+        ``async_tau=0`` makes the async step reproduce the synchronous
+        one exactly.
     """
 
     f: int
@@ -49,6 +60,8 @@ class AggSpec:
     distance_backend: str = "auto"     # auto | xla | pallas
     history_window: int = 4            # buffered-* window length
     seed: int = 0
+    async_tau: "int | tuple" = 0       # bounded staleness (scalar or per-worker)
+    async_schedule: str = "fixed"      # fixed | random
 
     @property
     def n_honest(self) -> int:

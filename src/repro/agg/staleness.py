@@ -1,0 +1,159 @@
+"""Staleness-aware aggregation: the ``stale-<base>`` family.
+
+In the bounded-staleness asynchronous regime (Alistarh et al. 2018's
+lock-free setting; Jin et al.'s big-data Byzantine SGD), the master
+aggregates whatever the ``GradientBus`` holds: worker w's slot gradient
+was computed ``tau_w`` steps ago against older parameters.  Stale honest
+gradients drift away from the current honest mean, which *widens* the
+leeway the paper's attack exploits — a slow-drift poisoner is
+indistinguishable from a slow honest worker.  The classical mitigation is
+staleness weighting: discount each worker by how old its contribution is
+before running any robust rule.
+
+``stale-<base>`` wraps **any** registered base rule through the unchanged
+registry (no per-rule forks): it reads per-worker staleness
+``s_w = state.step - state.bus.versions[w]`` from the carried
+:class:`~repro.agg.state.AggState`, computes weights
+
+* ``inv`` (default): ``w = 1 / (1 + s)``;
+* ``exp``: ``w = exp(-lam * (s - min(s)))`` (shifted by the freshest
+  worker so weights never underflow collectively);
+
+normalizes them by the freshest worker (``w / max(w)``, so the scale is
+in ``(0, 1]`` and never *amplifies* anyone — a uniformly-fresh or
+uniformly-stale committee gets scale exactly 1 and a ``stale-*`` rule
+run synchronously is bit-identical to its base), and reweights the
+worker stack before handing it to the base rule's dense/tree
+implementation.  Stateful bases
+(``buffered-*``, ``centered_clip_momentum``) compose: the same
+``AggState`` carries both the bus and the base's buffers.
+
+Name grammar: ``stale-<base>`` (inv weights), ``stale-inv-<base>``,
+``stale-exp-<base>`` — e.g. ``stale-bulyan-krum``, ``stale-exp-cwmed``,
+``stale-buffered-krum``.  Resolved and cached by
+``repro.agg.registry.resolve_rule`` like the other composite families.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.agg.registry import AggregatorRule
+from repro.agg.state import AggState
+
+__all__ = ["DEFAULT_STALE_LAMBDA", "make_stale", "stale_scale",
+           "stale_weights"]
+
+#: decay rate of the ``exp`` staleness-weight schedule
+DEFAULT_STALE_LAMBDA = 0.5
+
+
+def stale_weights(staleness: jnp.ndarray, weight: str = "inv",
+                  lam: float = DEFAULT_STALE_LAMBDA) -> jnp.ndarray:
+    """Per-worker staleness weights (fresh = 1, monotone decreasing).
+
+    Args:
+      staleness: ``(n,)`` integer staleness values ``>= 0`` (steps since
+        each worker's slot gradient was computed).
+      weight: ``"inv"`` for ``1 / (1 + s)`` or ``"exp"`` for
+        ``exp(-lam * (s - min(s)))`` — the exp schedule is shifted by
+        the freshest worker so at least one weight is exactly 1 and the
+        normalization in :func:`stale_scale` can never divide by an
+        underflowed sum.
+      lam: decay rate of the ``exp`` schedule (ignored by ``inv``).
+
+    Returns:
+      ``(n,)`` float32 weights in ``(0, 1]``.
+    """
+    s = staleness.astype(jnp.float32)
+    if weight == "inv":
+        return 1.0 / (1.0 + s)
+    if weight == "exp":
+        return jnp.exp(-lam * (s - jnp.min(s)))
+    raise ValueError(
+        f"staleness weight must be 'inv' or 'exp', got {weight!r}")
+
+
+def stale_scale(state: AggState, weight: str = "inv",
+                lam: float = DEFAULT_STALE_LAMBDA) -> jnp.ndarray:
+    """Per-worker scale in ``(0, 1]`` read from a carried state.
+
+    Staleness is ``state.step - state.bus.versions`` — the async step
+    stamps ``versions[w]`` with the step each slot gradient was computed
+    at and increments ``step`` once per aggregation, so at aggregation
+    ``t`` the difference is exactly the slot age.  The weights are
+    normalized by the freshest worker (``w / max(w)``): nobody is ever
+    *amplified* — amplifying fresh workers destabilizes selection rules
+    — and a uniformly-fresh (or uniformly-stale) committee gets scale
+    exactly 1, so every base rule reproduces its synchronous output
+    bitwise.
+
+    Args:
+      state: carried ``AggState`` with an allocated ``bus``.
+      weight: staleness-weight schedule (see :func:`stale_weights`).
+      lam: decay rate of the ``exp`` schedule.
+
+    Returns:
+      ``(n,)`` float32 scale ``w / max(w)`` (n = ``len(bus.versions)``).
+    """
+    staleness = state.step - state.bus.versions
+    w = stale_weights(staleness, weight, lam)
+    return w / jnp.max(w)
+
+
+def make_stale(name: str, base: AggregatorRule, weight: str = "inv",
+               lam: float = DEFAULT_STALE_LAMBDA) -> AggregatorRule:
+    """Build the ``stale-<base>`` composite around any registered rule.
+
+    The composite is stateful with ``"bus"`` prepended to the base's
+    ``state_fields``: it reads staleness from the carried bus metadata,
+    scales the worker stack by :func:`stale_scale`, and delegates to the
+    base rule — the base's own dense/tree implementations run unchanged
+    on the reweighted stack (a stateful base additionally threads the
+    same ``AggState`` and owns the ``step`` increment).
+
+    Args:
+      name: composite registry name (``"stale[-inv|-exp]-<base>"``).
+      base: the resolved base rule; its tree implementation is wrapped
+        only when it has one.
+      weight: staleness-weight schedule (see :func:`stale_weights`).
+      lam: decay rate of the ``exp`` schedule.
+
+    Returns:
+      A stateful :class:`AggregatorRule` with the base's quorum.
+    """
+    state_fields: Tuple[str, ...] = (
+        ("bus",) + tuple(f for f in base.state_fields if f != "bus"))
+
+    def dense(grads, f, state):
+        scale = stale_scale(state, weight, lam).astype(grads.dtype)
+        scaled = grads * scale[:, None]
+        if base.stateful:
+            res, state = base.dense_fn(scaled, f, state)
+        else:
+            res = base.dense_fn(scaled, f)
+            state = state._replace(step=state.step + 1)
+        return res, state
+
+    tree_fn = None
+    if base.tree_fn is not None:
+        def tree_fn(ctx, state):
+            scale = stale_scale(state, weight, lam).astype(ctx.cdt)
+            scaled = [l.astype(ctx.cdt)
+                      * scale.reshape((ctx.n,) + (1,) * (l.ndim - 1))
+                      for l in ctx.leaves]
+            sctx = ctx.with_leaves(scaled)
+            if base.stateful:
+                out, state = base.tree_fn(sctx, state)
+            else:
+                out = base.tree_fn(sctx)
+                state = state._replace(step=state.step + 1)
+            return out, state
+
+    return AggregatorRule(
+        name=name, min_n=base.min_n, dense_fn=dense, tree_fn=tree_fn,
+        byzantine_resilient=base.byzantine_resilient, stateful=True,
+        state_fields=state_fields, history_window=base.history_window,
+        doc=f"staleness-weighted ({weight}) worker stack fed to "
+            f"{base.name}")

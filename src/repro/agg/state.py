@@ -15,6 +15,13 @@ so it jits, shards, and donates like any other carry:
 * ``center``   — the momentum-carried center of
   ``centered_clip_momentum``: ``(d,)`` dense, tuple of ``(*dims,)``
   leaves on the tree path.
+* ``bus``      — the asynchronous runtime's ``GradientBus``
+  (``repro.dist.async_train``): per-worker versioned gradient slots in
+  the *same layout as the template* (a bare ``(n, d)`` array dense, the
+  gradient pytree itself on the tree path) plus ``(n,)`` int32
+  ``versions`` / ``arrival_step`` arrays.  The ``stale-<base>`` rules
+  (``repro.agg.staleness``) read staleness as ``step - bus.versions``;
+  the async step owns the slot writes.
 
 Unused fields stay ``()`` (an empty pytree), so a rule only allocates
 the buffers its ``state_fields`` declare.
@@ -37,11 +44,13 @@ class AggState(NamedTuple):
     step:     () int32 — aggregations absorbed so far.
     history:  sliding-window gradient buffer(s), or ``()``.
     center:   momentum-carried center leaves, or ``()``.
+    bus:      async runtime's ``GradientBus`` slots + versions, or ``()``.
     """
 
     step: jnp.ndarray
     history: Any = ()
     center: Any = ()
+    bus: Any = ()
 
 
 def init_state(rule: AggregatorRule, template: Any,
@@ -67,13 +76,17 @@ def init_state(rule: AggregatorRule, template: Any,
     Returns:
       An :class:`AggState` with ``step = 0`` and fp32 zero buffers for
       exactly the fields in ``rule.state_fields``; a stateless rule gets
-      ``AggState(0, (), ())``.
+      ``AggState(0, (), (), ())``.  A rule declaring ``"bus"`` gets a
+      zeroed ``GradientBus`` whose slots mirror the template's own
+      structure and dtypes (rules only read ``bus.versions``; the async
+      step owns the slots).
     """
     leaves = jax.tree_util.tree_leaves(template)
     dense = (flat if flat is not None
              else len(leaves) == 1 and leaves[0] is template)
     history: Any = ()
     center: Any = ()
+    bus: Any = ()
     if "history" in rule.state_fields:
         w = rule.history_window
         if not w or w < 1:
@@ -86,5 +99,8 @@ def init_state(rule: AggregatorRule, template: Any,
     if "center" in rule.state_fields:
         cs = [jnp.zeros(leaf.shape[1:], jnp.float32) for leaf in leaves]
         center = cs[0] if dense else tuple(cs)
+    if "bus" in rule.state_fields:
+        from repro.dist.async_train import init_bus
+        bus = init_bus(template)
     return AggState(step=jnp.zeros((), jnp.int32), history=history,
-                    center=center)
+                    center=center, bus=bus)

@@ -10,7 +10,11 @@ is exact up to tolerance and jit-compatible.
 
 Beyond-paper attacks used as additional benchmark adversaries: ALIE
 ("A Little Is Enough", Baruch et al. 2019), IPM (inner-product manipulation,
-Xie et al. 2019), sign-flip, mimic, random, zero.
+Xie et al. 2019), sign-flip, mimic, random, zero.  The asynchronous
+runtime adds two delay-exploiting adversaries — ``stale_replay`` and
+``slow_drift`` — which additionally read ``prev`` (their own previous
+bus submissions, threaded by the async step builders; see
+``repro.dist.async_train`` and docs/async-runtime.md).
 
 All attacks have the signature::
 
@@ -253,6 +257,68 @@ def mimic(honest: jnp.ndarray, f: int, key=None, *, target: int = 0
     return jnp.repeat(honest[target][None, :], f, axis=0)
 
 
+# ---------------------------------------------------------------------------
+# delay-exploiting attacks (the asynchronous runtime's adversaries)
+# ---------------------------------------------------------------------------
+#
+# Both read ``prev`` — the Byzantine rows of the previous GradientBus —
+# which only the async step builders thread through (repro.dist.async_train
+# / repro.training.trainer).  Called without ``prev`` (the synchronous
+# runtime) they degenerate to a mimic-the-mean submission each step.
+
+def stale_replay(honest: jnp.ndarray, f: int, key=None, *,
+                 prev: Optional[jnp.ndarray] = None, step=None,
+                 hold: int = 0, scale: float = 1.0) -> jnp.ndarray:
+    """Replay a once-credible gradient forever (async ε-analogue, part 1).
+
+    At step 0 the omniscient adversary records the honest mean — a
+    perfectly legitimate submission — scaled by ``scale``, then resubmits
+    it *unchanged* every step while stamping a fresh arrival on the bus.
+    Under bounded staleness an old honest gradient is expected, so the
+    replay hides in the leeway asynchrony opens; as honest training
+    moves on, the frozen early-training direction keeps over-applying
+    itself through the average (``scale`` amplifies the replayed
+    magnitude, ``scale < 0`` replays the *ascent* direction — the
+    classic poisoned-replay variants).  ``hold > 0`` re-records every
+    ``hold`` steps (a replay window instead of a full freeze)."""
+    mean = jnp.mean(honest, axis=0)
+    rec = jnp.repeat(scale * mean[None, :], f, axis=0)
+    if prev is None:
+        return rec
+    t = jnp.asarray(step if step is not None else 0, jnp.int32)
+    refresh = t == 0
+    if hold > 0:
+        refresh = refresh | (t % hold == 0)
+    return jnp.where(refresh, rec, prev.astype(rec.dtype)
+                     ).astype(honest.dtype)
+
+
+def slow_drift(honest: jnp.ndarray, f: int, key=None, *,
+               prev: Optional[jnp.ndarray] = None, step=None,
+               eps: float = 0.5, direction: str = "anti") -> jnp.ndarray:
+    """Drift from the honest mean by eps * delta_bar per step (part 2).
+
+    The async analogue of the paper's ε-perturbation: each submission
+    differs from the adversary's *previous* one by less than the honest
+    workers' own per-step spread (delta_bar, §B.1), so no single step is
+    distinguishable from an honest straggler — but the drift integrates
+    into an O(steps) displacement along ``direction`` ("anti": against
+    the sign of the current honest mean; "ones": the all-ones vector)."""
+    mean = jnp.mean(honest, axis=0)
+    rec = jnp.repeat(mean[None, :], f, axis=0)
+    if direction == "anti":
+        e = -jnp.sign(mean)
+        e = jnp.where(e == 0, 1.0, e).astype(honest.dtype)
+    else:
+        e = jnp.ones_like(mean)
+    db = _delta_bar(honest)
+    if prev is None:
+        return rec + eps * db * e[None, :]
+    t = jnp.asarray(step if step is not None else 0, jnp.int32)
+    drifted = prev.astype(jnp.float32) + eps * db * e[None, :]
+    return jnp.where(t == 0, rec, drifted).astype(honest.dtype)
+
+
 ATTACKS = {
     "none": None,
     "omniscient_lp": omniscient_lp,
@@ -263,6 +329,8 @@ ATTACKS = {
     "random": random_noise,
     "zero": zero,
     "mimic": mimic,
+    "stale_replay": stale_replay,
+    "slow_drift": slow_drift,
 }
 
 

@@ -15,6 +15,10 @@ production path:
                path), windowed coordinate phase, per-leaf attacks —
                rule bodies resolve through the ``repro.agg`` registry
   train.py     the jit-able sharded Byzantine train step
+  async_train.py  the asynchronous bounded-staleness runtime: the
+               versioned GradientBus, deterministic delay schedules,
+               and the async train step aggregating the slot stack
+               through the same registry (docs/async-runtime.md)
   serve.py     prefill/decode steps consumed by the dry-run and engine
   serve_robust.py  Byzantine-resilient ensemble serving: replica param
                stacks (axis mapped onto ``data``), per-token logits
@@ -40,6 +44,10 @@ from repro.dist.sharding import (batch_pspec, cache_shardings,
                                  param_shardings)
 from repro.dist.train import (DistByzantineSpec, init_agg_state,
                               make_loss_fn, make_train_step)
+from repro.dist.async_train import (GradientBus, delivery_mask,
+                                    init_async_state, init_bus,
+                                    make_async_train_step, resolve_tau,
+                                    update_bus)
 from repro.dist.serve import make_prefill_step, make_serve_step
 from repro.dist.serve_robust import (aggregate_logits, init_ensemble_state,
                                      make_robust_prefill_step,
@@ -48,14 +56,16 @@ from repro.dist.serve_robust import (aggregate_logits, init_ensemble_state,
                                      replicate_params, stack_replicas)
 
 __all__ = [
-    "DistAggResult", "DistByzantineSpec", "aggregate_logits", "batch_pspec",
-    "cache_shardings", "coordinate_phase_nd", "distributed_aggregate",
-    "ensemble_cache_shardings", "ensemble_param_shardings", "gram_pspec",
-    "init_agg_state", "init_ensemble_state", "inject_byzantine",
-    "make_host_mesh", "make_loss_fn", "make_prefill_step",
-    "make_production_mesh", "make_robust_prefill_step",
-    "make_robust_serve_step", "make_serve_step", "make_train_step",
-    "mesh_axis_sizes", "pairwise_sq_dists_tree", "param_shardings",
-    "poison_replicas", "replicate_cache", "replicate_params",
-    "resolve_distance_backend", "stack_replicas",
+    "DistAggResult", "DistByzantineSpec", "GradientBus", "aggregate_logits",
+    "batch_pspec", "cache_shardings", "coordinate_phase_nd",
+    "delivery_mask", "distributed_aggregate", "ensemble_cache_shardings",
+    "ensemble_param_shardings", "gram_pspec", "init_agg_state",
+    "init_async_state", "init_bus", "init_ensemble_state",
+    "inject_byzantine", "make_async_train_step", "make_host_mesh",
+    "make_loss_fn", "make_prefill_step", "make_production_mesh",
+    "make_robust_prefill_step", "make_robust_serve_step", "make_serve_step",
+    "make_train_step", "mesh_axis_sizes", "pairwise_sq_dists_tree",
+    "param_shardings", "poison_replicas", "replicate_cache",
+    "replicate_params", "resolve_distance_backend", "resolve_tau",
+    "stack_replicas", "update_bus",
 ]

@@ -320,7 +320,9 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
       gar: any name ``repro.agg.resolve_rule`` accepts with a tree
         implementation — the registered rules, ``"bulyan-<base>"`` for
         distance-only bases (krum/geomed), and stateful
-        ``"buffered-<base>"`` / ``"centered_clip_momentum"``.
+        ``"buffered-<base>"`` / ``"centered_clip_momentum"`` /
+        ``"stale-<base>"`` (staleness weights read from the carried
+        state's ``GradientBus``; see ``repro.agg.staleness``).
       agg_dtype: ``"native"`` (fp32) | ``"float32"`` | ``"bfloat16"`` —
         the accumulation dtype contract (see module docstring).
       window: coordinate-phase window for bulyan rules (see
@@ -404,7 +406,8 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
                      scale: Optional[float] = None, eps: float = 0.5,
                      z: Optional[float] = None, target: int = 0,
                      coord=0, margin: float = 1.0,
-                     direction: str = "ones") -> Any:
+                     direction: str = "ones", prev: Any = None,
+                     hold: int = 0) -> Any:
     """Replace the last ``f`` worker rows of every leaf with Byzantine
     submissions computed from the first ``n - f`` (honest) rows.
 
@@ -426,6 +429,12 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
         ``direction`` is the linf attack's +-1 vector — ``"ones"`` or
         ``"anti"`` (against the sign of the honest mean), matching the
         flat ``repro.core.attacks.omniscient_linf``.
+      prev/hold: the delay-exploiting attacks' parameters —
+        ``stale_replay`` and ``slow_drift`` read ``prev``, a pytree of
+        ``(f, *dims)`` leaves holding the adversary's previous bus
+        submissions (threaded by the async step builders; ``None``
+        degenerates both to mimic-the-mean), and ``stale_replay``
+        re-records every ``hold`` steps (0 = freeze forever).
 
     Returns:
       The tree with the last f rows of every leaf replaced, dtypes and
@@ -471,6 +480,37 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
         byz = [_broadcast(jnp.mean(h.astype(jnp.float32), axis=0)
                           - z * jnp.std(h.astype(jnp.float32), axis=0), l)
                for h, l in zip(honest, leaves)]
+    elif attack in ("stale_replay", "slow_drift"):
+        means = [jnp.mean(h.astype(jnp.float32), axis=0) for h in honest]
+        t = jnp.asarray(step if step is not None else 0, jnp.int32)
+        prev_leaves = (jax.tree_util.tree_leaves(prev)
+                       if prev is not None else [None] * len(leaves))
+        if len(prev_leaves) != len(leaves):
+            raise ValueError(
+                "prev must mirror the gradient tree's flat leaf order")
+        if attack == "stale_replay":
+            s = 1.0 if scale is None else scale
+            refresh = t == 0
+            if hold > 0:
+                refresh = refresh | (t % hold == 0)
+            byz = [_broadcast(s * m, l) if p is None
+                   else jnp.where(refresh, _broadcast(s * m, l),
+                                  p.astype(l.dtype))
+                   for m, l, p in zip(means, leaves, prev_leaves)]
+        else:
+            db = _tree_delta_bar(honest)
+            if direction == "anti":
+                es = [jnp.where(m == 0, 1.0, -jnp.sign(m)) for m in means]
+            else:
+                es = [jnp.ones_like(m) for m in means]
+            byz = []
+            for m, e, l, p in zip(means, es, leaves, prev_leaves):
+                if p is None:
+                    byz.append(_broadcast(m + eps * db * e, l))
+                else:
+                    drifted = p.astype(jnp.float32) + eps * db * e[None]
+                    byz.append(jnp.where(t == 0, _broadcast(m, l),
+                                         drifted).astype(l.dtype))
     elif attack in ("omniscient_linf", "omniscient_lp"):
         d = _tree_coord_count(leaves)
         db = _tree_delta_bar(honest)

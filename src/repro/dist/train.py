@@ -12,6 +12,11 @@ parameters on ``model``, and the per-leaf Gram contractions of
 all-reduce.
 
 The single-host flat-matrix reference lives in ``repro.training.trainer``.
+The asynchronous variant of this step — the same protocol without the
+per-step barrier, aggregating a ``GradientBus`` of versioned per-worker
+slots under bounded staleness — lives in ``repro.dist.async_train``
+(``make_async_train_step`` reuses ``make_loss_fn`` and reproduces this
+step bitwise at ``async_tau = 0``).
 """
 from __future__ import annotations
 

@@ -126,6 +126,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             optimizer_name: str = "momentum", moe_impl: Optional[str] = None,
             param_dtype: Optional[str] = None, agg_dtype: str = "native",
             distance_backend: str = "auto", unroll: bool = False,
+            async_tau: Optional[int] = None, async_schedule: str = "fixed",
             attn_shard: Optional[str] = None,
             logits_dtype: Optional[str] = None,
             serve_gar: Optional[str] = None, serve_f: int = 2,
@@ -136,6 +137,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     from repro.agg import quorum
     from repro.configs import get_config, get_reduced, shape_applicable
+    from repro.dist.async_train import (init_async_state,
+                                        make_async_train_step)
     from repro.dist.mesh import make_production_mesh
     from repro.dist.serve import make_prefill_step, make_serve_step
     from repro.dist.serve_robust import (init_ensemble_state,
@@ -190,7 +193,28 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         params, param_sh = S.param_specs(cfg, mesh)
         inputs = S.input_specs(cfg, shape_name, mesh)
 
-        if shape.kind == "train":
+        if shape.kind == "train" and async_tau is not None:
+            # asynchronous bounded-staleness train step: the GradientBus
+            # (per-worker versioned slots) rides in the carried AggState,
+            # initialized abstractly so nothing is materialized
+            opt = get_optimizer(optimizer_name, 1e-3)
+            opt_state, opt_sh = S.opt_specs(params, opt, mesh)
+            spec = DistByzantineSpec(f=3, gar=gar, attack=attack,
+                                     agg_dtype=agg_dtype,
+                                     distance_backend=distance_backend,
+                                     async_tau=async_tau,
+                                     async_schedule=async_schedule)
+            record.update(async_tau=async_tau,
+                          async_schedule=async_schedule)
+            step = make_async_train_step(cfg, spec, opt, impl=impl,
+                                         mesh=mesh)
+            n_workers = inputs["tokens"].shape[0]
+            agg_state = jax.eval_shape(
+                lambda: init_async_state(spec, params, n_workers))
+            jitted = jax.jit(step, donate_argnums=(0, 1),
+                             out_shardings=(param_sh, opt_sh, None, None))
+            lowered = jitted.lower(params, opt_state, inputs, agg_state)
+        elif shape.kind == "train":
             opt = get_optimizer(optimizer_name, 1e-3)
             opt_state, opt_sh = S.opt_specs(params, opt, mesh)
             spec = DistByzantineSpec(f=3, gar=gar, attack=attack,
@@ -323,6 +347,18 @@ def main() -> None:
                     help="pairwise-distance implementation for distance-"
                          "based GARs (pallas = shard-mapped tiled kernel; "
                          "auto = pallas on TPU, xla elsewhere)")
+    ap.add_argument("--async-tau", type=int, default=None,
+                    help="lower the asynchronous bounded-staleness train "
+                         "step instead of the synchronous one (train "
+                         "shapes only): per-worker staleness bound of "
+                         "the GradientBus delay schedule; pair with "
+                         "--gar stale-<base> for staleness-weighted "
+                         "aggregation (repro.dist.async_train)")
+    ap.add_argument("--async-schedule", default="fixed",
+                    choices=["fixed", "random"],
+                    help="deterministic delay schedule of --async-tau "
+                         "(fixed = staggered round-robin, random = "
+                         "bounded Bernoulli)")
     ap.add_argument("--expert-gather", action="store_true",
                     help="constrain expert weights to TP-only at use site "
                          "(per-layer all-gather instead of activation "
@@ -360,6 +396,8 @@ def main() -> None:
                   impl=args.impl, moe_impl=args.moe_impl,
                   param_dtype=args.param_dtype, agg_dtype=args.agg_dtype,
                   distance_backend=args.distance_backend,
+                  async_tau=args.async_tau,
+                  async_schedule=args.async_schedule,
                   unroll=args.unroll, attn_shard=args.attn_shard,
                   logits_dtype=args.logits_dtype,
                   serve_gar=args.serve_gar, serve_f=args.serve_f,

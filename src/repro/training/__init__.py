@@ -1,5 +1,9 @@
-from repro.training.trainer import (ByzantineSpec, ByzantineTrainer,
-                                    init_flat_agg_state, make_byzantine_step)
+from repro.training.trainer import (AsyncByzantineTrainer, ByzantineSpec,
+                                    ByzantineTrainer, init_flat_agg_state,
+                                    init_flat_async_state,
+                                    make_async_byzantine_step,
+                                    make_byzantine_step)
 
-__all__ = ["ByzantineSpec", "ByzantineTrainer", "init_flat_agg_state",
-           "make_byzantine_step"]
+__all__ = ["AsyncByzantineTrainer", "ByzantineSpec", "ByzantineTrainer",
+           "init_flat_agg_state", "init_flat_async_state",
+           "make_async_byzantine_step", "make_byzantine_step"]

@@ -12,8 +12,17 @@ The aggregation rule is resolved through the unified registry
 step and the trainer loop, while stateless rules keep the historic
 signatures untouched.
 
-The mesh-sharded production variant lives in ``repro.dist.train`` — this
-module is the semantics reference it is tested against.
+The *asynchronous* flat reference (``make_async_byzantine_step`` /
+``AsyncByzantineTrainer``) drops the per-step barrier: submissions live
+in a ``GradientBus`` (``repro.dist.async_train``) of per-worker
+versioned slots, an in-graph delay schedule decides who delivers, and
+the rule — typically a staleness-weighted ``stale-<base>`` — aggregates
+the slot stack.  With ``spec.async_tau = 0`` the async step reproduces
+the synchronous one exactly (see docs/async-runtime.md).
+
+The mesh-sharded production variants live in ``repro.dist.train`` /
+``repro.dist.async_train`` — this module is the semantics reference
+they are tested against.
 """
 from __future__ import annotations
 
@@ -24,9 +33,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.agg.specs import AggSpec
-from repro.agg.state import init_state
+from repro.agg.state import AggState, init_state
 from repro.core import attacks as attacks_lib
 from repro.core import pytree as pt
+from repro.dist.async_train import (delivery_mask, init_bus, resolve_tau,
+                                    update_bus)
 from repro.optim import Optimizer
 
 #: deprecation alias — the single-host spec is now the unified
@@ -175,6 +186,196 @@ class ByzantineTrainer:
                     *args, self.agg_state)
             else:
                 self.params, self.opt_state, m = fn(*args)
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = t
+            if eval_fn and eval_every and t % eval_every == 0:
+                rec["eval_acc"] = float(eval_fn(self.params))
+            self.history.append(rec)
+        return self.history
+
+
+# ---------------------------------------------------------------------------
+# the asynchronous flat reference (GradientBus over the (n, d) matrix)
+# ---------------------------------------------------------------------------
+
+def init_flat_async_state(spec: AggSpec, params,
+                          n_rows: Optional[int] = None) -> AggState:
+    """Zeroed bus-carrying ``AggState`` for the flat async path.
+
+    Unlike ``init_flat_agg_state`` this never returns ``None``: the
+    async runtime always carries a state, because the ``GradientBus``
+    itself is the asynchrony — stateless rules get ``step`` + bus only,
+    stateful rules (``stale-*``, ``buffered-*``) their buffers too.
+
+    Args:
+      spec: the protocol spec; ``n_workers`` must be set.
+      params: the parameter pytree — only the total coordinate count is
+        read.
+      n_rows: row count of the stacked matrix / bus — ``n_workers``
+        under attack, ``n_honest`` in clean mode (``None`` infers it
+        from the spec's attack configuration).
+
+    Returns:
+      An ``AggState`` whose ``bus`` holds a zero ``(n_rows, d)`` slot
+      matrix with ``step = versions = 0``.
+    """
+    rule = spec.rule()
+    if n_rows is None:
+        n_rows = (spec.n_workers if spec.f > 0 and spec.attack != "none"
+                  else spec.n_honest)
+    d = sum(math.prod(p.shape) for p in jax.tree_util.tree_leaves(params))
+    template = jax.ShapeDtypeStruct((n_rows, d), jnp.float32)
+    if rule.stateful:
+        state = init_state(rule, template, flat=True)
+    else:
+        state = AggState(step=jnp.zeros((), jnp.int32))
+    if state.bus == ():
+        state = state._replace(bus=init_bus(template))
+    return state
+
+
+def make_async_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
+                              spec: AggSpec) -> Callable:
+    """Build the jit-able asynchronous flat training step.
+
+    The single-host reference of ``repro.dist.async_train
+    .make_async_train_step``: same ``GradientBus`` protocol over the
+    flat ``(n, d)`` matrix.  All workers compute fresh gradients, the
+    last f are rewritten by the configured attack (the delay-exploiting
+    ``stale_replay`` / ``slow_drift`` read their previous bus rows), the
+    delay schedule (``spec.async_tau`` / ``spec.async_schedule``)
+    decides which honest workers deliver — Byzantine rows always do —
+    and the registry rule aggregates the slot stack.
+
+    Unlike ``make_byzantine_step`` there is no ``attack_on`` variant:
+    the bus row count is baked into the carried state, so the lock-free
+    protocol cannot re-synchronize mid-run (see
+    :class:`AsyncByzantineTrainer`) — clean runs are expressed through
+    the spec (``attack="none"`` or ``f=0``), which keeps the step's row
+    count and :func:`init_flat_async_state`'s inference agreeing.
+
+    Args:
+      loss_fn: ``loss_fn(params, x, y) -> scalar``.
+      optimizer: the ``repro.optim`` optimizer.
+      spec: unified protocol spec (``n_workers`` set; async fields read).
+
+    Returns:
+      ``step(params, opt_state, x, y, key, agg_state) -> (params,
+      opt_state, metrics, agg_state)`` — always the stateful signature;
+      size the carried state with :func:`init_flat_async_state`.  With
+      ``spec.async_tau = 0`` the step reproduces
+      ``make_byzantine_step`` bitwise on identical inputs.
+    """
+    spec.validate()
+    rule = spec.rule()
+    attack = attacks_lib.get_attack(spec.attack)
+    akw = dict(spec.attack_kwargs)
+    delay_attacks = (attacks_lib.stale_replay, attacks_lib.slow_drift)
+
+    def step(params, opt_state, x, y, key, agg_state):
+        grad_fn = jax.grad(loss_fn)
+        worker_grads = jax.vmap(lambda xi, yi: grad_fn(params, xi, yi))(x, y)
+        flat, ctx = pt.stack_flatten(worker_grads)      # (n_honest, d)
+        t = agg_state.step
+        n_h = spec.n_honest
+
+        attacked = attack is not None and spec.f > 0
+        if attacked:
+            kw = dict(akw)
+            if attack in (attacks_lib.omniscient_lp,
+                          attacks_lib.omniscient_linf):
+                kw.setdefault("step", opt_state["step"])
+            if attack in delay_attacks:
+                kw.setdefault("prev", agg_state.bus.grads[n_h:])
+                kw.setdefault("step", t)
+            byz = attack(flat, spec.f, key, **kw)
+            full = jnp.concatenate([flat, byz], axis=0)
+        else:
+            full = flat
+        n_eff = full.shape[0]
+
+        tau = resolve_tau(spec.async_tau, n_eff)
+        deliver = delivery_mask(t, agg_state.bus.versions, tau,
+                                schedule=spec.async_schedule,
+                                seed=spec.seed)
+        if attacked:
+            deliver = deliver | (jnp.arange(n_eff) >= n_h)
+        bus = update_bus(agg_state.bus, full, t, deliver)
+        state_in = agg_state._replace(bus=bus)
+
+        if rule.stateful:
+            res, new_state = rule.dense_fn(bus.grads, spec.f_declared,
+                                           state_in)
+        else:
+            res = rule.dense_fn(bus.grads, spec.f_declared)
+            new_state = state_in._replace(step=t + 1)
+        agg = pt.unflatten(res.gradient, ctx)
+        new_params, new_opt = optimizer.update(agg, opt_state, params)
+
+        honest_mean = jnp.mean(bus.grads[:n_h], axis=0)
+        staleness = t - bus.versions
+        metrics = {
+            "loss": loss_fn(params, x[0], y[0]),
+            "byz_weight": jnp.sum(res.selected[n_h:])
+            if n_eff > n_h else jnp.zeros(()),
+            "agg_dev": jnp.linalg.norm(res.gradient - honest_mean),
+            "grad_norm": jnp.linalg.norm(res.gradient),
+            "staleness_mean": jnp.mean(staleness.astype(jnp.float32)),
+            "staleness_max": jnp.max(staleness).astype(jnp.float32),
+            "delivered": jnp.sum(deliver).astype(jnp.float32),
+        }
+        return new_params, new_opt, metrics, new_state
+
+    return step
+
+
+class AsyncByzantineTrainer:
+    """Convenience loop for the asynchronous runtime (flat reference).
+
+    Mirrors :class:`ByzantineTrainer` but drives
+    :func:`make_async_byzantine_step`: the trainer owns the carried
+    ``AggState`` — whose ``bus`` holds every worker's versioned slot —
+    zero-initialized at construction and threaded across ``run`` calls.
+    There is no ``attack_until`` switch: the bus row count is fixed at
+    construction (n under attack, n_honest clean), matching the
+    lock-free protocol where the committee never re-synchronizes.
+    """
+
+    def __init__(self, loss_fn, params, optimizer: Optimizer,
+                 spec: AggSpec, seed: int = 0):
+        self.spec = spec
+        self.params = params
+        self.optimizer = optimizer
+        self.opt_state = optimizer.init(params)
+        self.agg_state = init_flat_async_state(spec, params)
+        self._step = jax.jit(
+            make_async_byzantine_step(loss_fn, optimizer, spec))
+        self.key = jax.random.PRNGKey(seed)
+        self.history: list = []
+
+    def run(self, batcher, n_steps: int,
+            eval_fn: Optional[Callable] = None, eval_every: int = 0,
+            start_step: int = 0):
+        """Drive the jitted async step for ``n_steps`` (see
+        :meth:`ByzantineTrainer.run` for the loop contract).
+
+        Args:
+          batcher: per-honest-worker batch source (``batcher.batch(t)``).
+          n_steps: number of async steps to run.
+          eval_fn: optional ``params -> accuracy`` probe.
+          eval_every: evaluation period (0 = never).
+          start_step: first step index (continuation support).
+
+        Returns:
+          The accumulated metrics history (list of per-step dicts).
+        """
+        for t in range(start_step, start_step + n_steps):
+            x, y = batcher.batch(t)
+            self.key, sub = jax.random.split(self.key)
+            (self.params, self.opt_state, m,
+             self.agg_state) = self._step(self.params, self.opt_state,
+                                          jnp.asarray(x), jnp.asarray(y),
+                                          sub, self.agg_state)
             rec = {k: float(v) for k, v in m.items()}
             rec["step"] = t
             if eval_fn and eval_every and t % eval_every == 0:

@@ -17,10 +17,12 @@ def test_front_door_exists():
     assert (REPO / "README.md").exists()
     assert (REPO / "docs" / "dist-runtime.md").exists()
     assert (REPO / "docs" / "serving.md").exists()
+    assert (REPO / "docs" / "async-runtime.md").exists()
 
 
 @pytest.mark.parametrize("doc", ["README.md", "docs/dist-runtime.md",
-                                 "docs/aggregation.md", "docs/serving.md"])
+                                 "docs/aggregation.md", "docs/serving.md",
+                                 "docs/async-runtime.md"])
 def test_doc_lints_clean(doc):
     errors = docs_lint.lint_file(REPO / doc)
     assert not errors, "\n".join(errors)
@@ -44,7 +46,9 @@ def test_lint_catches_bad_snippet(tmp_path):
 
 @pytest.mark.parametrize("pkg", ["repro.dist", "repro.kernels",
                                  "repro.serving", "repro.dist.serve",
-                                 "repro.dist.serve_robust"])
+                                 "repro.dist.serve_robust",
+                                 "repro.dist.async_train",
+                                 "repro.agg.staleness"])
 def test_public_symbols_documented(pkg):
     """Acceptance criterion: every public symbol exported by repro.dist
     (and repro.kernels, and the serving stack) carries a docstring, and
@@ -69,6 +73,20 @@ def test_serving_doc_covers_exported_api():
         names.update(importlib.import_module(pkg).__all__)
     missing = sorted(n for n in names if n not in text)
     assert not missing, f"docs/serving.md misses exported API: {missing}"
+
+
+def test_async_doc_covers_exported_api():
+    """docs/async-runtime.md must not drift from the async API surface:
+    every symbol exported by repro.dist.async_train and
+    repro.agg.staleness has to be mentioned by name."""
+    import importlib
+    text = (REPO / "docs" / "async-runtime.md").read_text()
+    names = set()
+    for pkg in ("repro.dist.async_train", "repro.agg.staleness"):
+        names.update(importlib.import_module(pkg).__all__)
+    missing = sorted(n for n in names if n not in text)
+    assert not missing, f"docs/async-runtime.md misses exported API: " \
+                        f"{missing}"
 
 
 def test_changes_log_mentions_every_pr():

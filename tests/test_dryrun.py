@@ -67,6 +67,26 @@ def test_reduced_dryrun_robust_ensemble_decode():
     assert rec["hlo_lines"] > 0
 
 
+@pytest.mark.slow
+def test_reduced_dryrun_async_stale_train():
+    """--async-tau + --gar stale-*: the asynchronous bounded-staleness
+    train step lowers + compiles on the production mesh with the
+    GradientBus-carrying AggState initialized via eval_shape (nothing
+    materialized), including the delay-exploiting in-graph attack."""
+    with tempfile.TemporaryDirectory() as td:
+        out = os.path.join(td, "d.json")
+        r = _run(["--arch", "mamba2-130m", "--shape", "train_4k",
+                  "--reduced", "--async-tau", "3", "--async-schedule",
+                  "fixed", "--gar", "stale-bulyan-krum", "--attack",
+                  "stale_replay", "--out", out])
+        assert r.returncode == 0, r.stderr[-3000:]
+        rec = json.load(open(out))
+    assert rec["async_tau"] == 3
+    assert rec["gar"] == "stale-bulyan-krum"
+    assert rec["roofline"]["compute_s"] > 0
+    assert rec["hlo_lines"] > 0
+
+
 def test_long_500k_skip_rules():
     from repro.configs import shape_applicable
     assert shape_applicable("mamba2-130m", "long_500k")
