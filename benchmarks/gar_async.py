@@ -41,7 +41,7 @@ def _train(gar: str, attack: str, tau: int, steps: int, *, n_honest=30,
     n = n_honest + (f if attack != "none" else 0)
     spec = ByzantineSpec(
         n_workers=n, f=f if attack != "none" else 0, gar=gar,
-        attack=attack, async_tau=tau,
+        attack=attack, async_tau=tau, seed=seed,
         attack_kwargs=(("scale", -4.0),) if attack == "stale_replay"
         else ())
     cls = AsyncByzantineTrainer if tau is not None else ByzantineTrainer
@@ -57,7 +57,7 @@ def _train(gar: str, attack: str, tau: int, steps: int, *, n_honest=30,
     return 1e6 * wall / steps, acc
 
 
-def main(steps: int = 60, taus=(0, 3)) -> None:
+def main(steps: int = 60, taus=(0, 3), seed: int = 1) -> None:
     """One row per (rule, tau, sync/async) on the miniature MNIST
     protocol: us/step measured, accuracy + the straggler-priced speedup
     derived.
@@ -66,6 +66,8 @@ def main(steps: int = 60, taus=(0, 3)) -> None:
       steps: measured training steps per row (after a 3-step warmup).
       taus: staleness bounds for the async rows (0 = the degenerate
         sync-equivalent case, the overhead measurement).
+      seed: PRNG seed threaded to init, batching and the attack noise —
+        the accuracy columns are deterministic per seed.
 
     Returns:
       None (emits CSV rows).
@@ -77,12 +79,13 @@ def main(steps: int = 60, taus=(0, 3)) -> None:
     for gar, attack in rules:
         base = gar.replace("stale-", "")
         if (base, attack) not in sync_rows:
-            sync_rows[(base, attack)] = _train(base, attack, None, steps)
+            sync_rows[(base, attack)] = _train(base, attack, None, steps,
+                                               seed=seed)
             us0, acc0 = sync_rows[(base, attack)]
             emit(f"gar_async/{base}_sync", us0, f"acc={acc0:.3f}", "sync")
         us_sync, acc_sync = sync_rows[(base, attack)]
         for tau in taus:
-            us, acc = _train(gar, attack, tau, steps)
+            us, acc = _train(gar, attack, tau, steps, seed=seed)
             # per-step wall-clock if steps are priced by the fastest
             # worker (async) vs the slowest straggler (sync barrier):
             # the staggered schedule lets a tau-stale worker lag tau+1

@@ -9,59 +9,69 @@
    under the *same* attack stays O(sigma_coord) = O(sigma / sqrt(d)) of
    the full-gradient sigma — i.e. flat in d on a per-coordinate scale
    while Krum's grows like sqrt(d): the ratio Krum/Bulyan grows ~ sqrt(d).
+
+The measurement itself lives in ``repro.audit.leeway`` (the adversarial
+self-audit's leeway meter, which also certifies the slopes against the
+checked-in ``benchmarks/artifacts/leeway_baseline.json``); this bench
+renders the same deterministic report as CSV rows and can re-emit the
+JSON artifact via ``--out``.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from benchmarks.common import emit
-from repro.core import (find_gamma_max, get_attack, get_gar,
-                        make_selection_checker)
+from repro.audit.leeway import measure_leeway
 
 
-def main(dims=(64, 256, 1024, 4096), n_h: int = 12, f: int = 3) -> None:
-    key = jax.random.PRNGKey(11)
-    gammas = {"krum": [], "geomed": []}
-    ratios = []
-    for d in dims:
-        honest = jax.random.normal(jax.random.fold_in(key, d),
-                                   (n_h, d)) * 0.5 + 1.0
-        e = jnp.zeros((d,)).at[0].set(1.0)
-        t0 = time.time()
-        for rule in ("krum", "geomed"):
-            check = make_selection_checker(rule, f)
-            g = float(find_gamma_max(honest, f, e, check))
-            gammas[rule].append(g)
-        # attack tuned against krum; measure aggregate deviation
-        byz = get_attack("omniscient_lp")(honest, f, None, gar_name="krum",
-                                          margin=0.95)
-        full = jnp.concatenate([honest, byz])
-        mean = jnp.mean(honest, axis=0)
-        kdev = float(jnp.max(jnp.abs(
-            get_gar("krum")(full, f).gradient - mean)))
-        bdev = float(jnp.max(jnp.abs(
-            get_gar("bulyan-krum")(full, f).gradient - mean)))
-        ratios.append(kdev / max(bdev, 1e-9))
-        us = 1e6 * (time.time() - t0)
+def main(dims=(64, 256, 1024, 4096), n_h: int = 12, f: int = 3,
+         seed: int = 11, out: str = "") -> None:
+    """Emit the leeway-scaling CSV rows (and optionally the artifact).
+
+    Args:
+      dims: dimension ladder.
+      n_h: honest worker count.
+      f: Byzantine worker count.
+      seed: PRNG seed — rows are a pure function of the arguments.
+      out: when non-empty, also write the JSON artifact here (the file
+        CI's leeway gate regresses against).
+
+    Returns:
+      None (emits CSV rows).
+    """
+    t0 = time.time()
+    report = measure_leeway(
+        rules=("average", "krum", "geomed", "bulyan-krum"),
+        dims=dims, n_h=n_h, f=f, seed=seed)
+    us = 1e6 * (time.time() - t0) / max(len(dims), 1)
+    rules = report["rules"]
+    gamma = report["gamma"]
+    for i, d in enumerate(dims):
+        kdev = rules["krum"]["margin_abs"][i]
+        bdev = rules["bulyan-krum"]["margin_abs"][i]
         emit(f"leeway/d{d}", us,
-             f"gamma_krum={gammas['krum'][-1]:.2f};"
-             f"gamma_geomed={gammas['geomed'][-1]:.2f};"
+             f"gamma_krum={gamma['krum']['values'][i]:.2f};"
+             f"gamma_geomed={gamma['geomed']['values'][i]:.2f};"
              f"krum_dev={kdev:.2f};bulyan_dev={bdev:.3f};"
-             f"ratio={ratios[-1]:.1f}")
-
-    ld = np.log(np.asarray(dims, float))
+             f"ratio={kdev / max(bdev, 1e-9):.1f}")
     for rule in ("krum", "geomed"):
-        slope = np.polyfit(ld, np.log(np.asarray(gammas[rule])), 1)[0]
         emit(f"leeway/slope_{rule}", 0,
-             f"loglog_slope={slope:.3f};expected~0.5")
-    rslope = np.polyfit(ld, np.log(np.asarray(ratios)), 1)[0]
+             f"loglog_slope={gamma[rule]['slope']:.3f};expected~0.5")
+    rslope = (rules["krum"]["slope_abs"]
+              - rules["bulyan-krum"]["slope_abs"])
     emit("leeway/slope_krum_over_bulyan", 0,
          f"loglog_slope={rslope:.3f};expected~0.5(Prop2)")
+    if out:
+        with open(out, "w") as fh:
+            json.dump(report, fh, indent=2, sort_keys=True)
+            fh.write("\n")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--seed", type=int, default=11)
+    ap.add_argument("--out", type=str, default="")
+    args = ap.parse_args()
+    main(seed=args.seed, out=args.out)

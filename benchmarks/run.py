@@ -19,6 +19,10 @@ def main() -> None:
                     help="longer training runs (closer to the paper's "
                          "epoch counts)")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the default PRNG seed of the benches "
+                         "that thread one (leeway, gar_async) — rows "
+                         "become a pure function of the seed")
     args = ap.parse_args()
 
     from benchmarks import (fig2_mnist_attack, fig3_cifar_attack,
@@ -31,14 +35,16 @@ def main() -> None:
     steps45 = 400 if args.full else 120
     steps6 = 150 if args.full else 60
     steps_async = 120 if args.full else 60
+    seeded = {} if args.seed is None else {"seed": args.seed}
 
     benches = [
-        ("leeway", lambda: leeway_scaling.main()),
+        ("leeway", lambda: leeway_scaling.main(**seeded)),
         ("gar_throughput", lambda: gar_throughput.main()),
         ("gar_throughput_dist", lambda: gar_throughput.main_dist()),
         ("gar_backends", lambda: gar_throughput.main_backends()),
         ("gar_buffered", lambda: gar_throughput.main_buffered()),
-        ("gar_async", lambda: gar_async.main(steps=steps_async)),
+        ("gar_async", lambda: gar_async.main(steps=steps_async,
+                                             **seeded)),
         ("serve_robust", lambda: serve_robust.main()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
         ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),

@@ -1,0 +1,71 @@
+"""One-command adversarial self-audit: corner sweep + leeway gate.
+
+The entry CI's ``audit`` job runs (and the local pre-merge check):
+
+    PYTHONPATH=src python scripts/run_audit.py            # quick grid
+    PYTHONPATH=src python scripts/run_audit.py --full     # whole grid
+    PYTHONPATH=src python scripts/run_audit.py --rebaseline
+
+* the corner sweep (``repro.audit.sweep``) walks every registered rule
+  x attack x (n, f, tau, schedule) corner;
+* the leeway meter (``repro.audit.leeway``) re-measures the ε-poisoning
+  margins over the dimension ladder and certifies the scaling slopes
+  against ``benchmarks/artifacts/leeway_baseline.json``.
+
+``--rebaseline`` rewrites the baseline artifact from the current tree
+(review the diff — a margin that moved by more than the gate's ratio
+means aggregation behavior changed).  Exit status is the total number
+of violations.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "src"))
+
+BASELINE = REPO / "benchmarks" / "artifacts" / "leeway_baseline.json"
+
+
+def main(argv=None) -> int:
+    """Run both audit gates against the checked-in baseline.
+
+    Args:
+      argv: command-line arguments (``None`` = ``sys.argv[1:]``):
+        ``--full`` runs the whole sweep grid instead of the CI quick
+        grid, ``--rebaseline`` rewrites the baseline artifact,
+        ``--seed`` reseeds the sweep's synthetic stacks.
+
+    Returns:
+      Process exit code — the total violation count across both gates.
+    """
+    from repro.audit import leeway, sweep
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--full", action="store_true",
+                    help="the whole sweep grid (CI runs --quick)")
+    ap.add_argument("--rebaseline", action="store_true",
+                    help="rewrite the checked-in leeway baseline")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sweep PRNG seed (the leeway ladder keeps its "
+                         "own fixed seed: the artifact must match the "
+                         "baseline)")
+    args = ap.parse_args(argv)
+
+    failures = sweep.main(([] if args.full else ["--quick"])
+                          + ["--seed", str(args.seed)])
+    leeway_args = []
+    if args.rebaseline:
+        BASELINE.parent.mkdir(parents=True, exist_ok=True)
+        leeway_args += ["--out", str(BASELINE)]
+    elif BASELINE.exists():
+        leeway_args += ["--baseline", str(BASELINE)]
+    failures += leeway.main(leeway_args)
+    print(f"run_audit: {failures} total violations", flush=True)
+    return failures
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

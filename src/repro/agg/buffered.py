@@ -84,6 +84,9 @@ def _centered_clip_tree(ctx: TreeContext) -> TreeAgg:
 
 @register_rule("centered_clip_momentum", min_n=lambda f: 2 * f + 1,
                stateful=True, state_fields=("center",),
+               # the carried center is a previous step's fixed point and
+               # may legitimately sit outside the *current* stack's hull
+               invariants=("finite",),
                doc="centered clipping with the center carried across steps")
 def centered_clip_momentum(grads: jnp.ndarray, f: int,
                            state: AggState) -> Tuple[AggResult, AggState]:
@@ -177,5 +180,8 @@ def make_buffered(name: str, base: AggregatorRule,
         name=name, min_n=base.min_n, dense_fn=dense, tree_fn=tree_fn,
         byzantine_resilient=base.byzantine_resilient, stateful=True,
         state_fields=("history",), history_window=window,
+        # the base's invariants hold relative to the *smoothed* stack it
+        # consumed (the audit recomputes the window means)
+        invariants=base.invariants,
         doc=f"window-{window} history means fed to {base.name} "
             f"(Alistarh et al. 2018-style)")

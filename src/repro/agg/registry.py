@@ -174,6 +174,22 @@ class AggregatorRule:
     state_fields: which ``AggState`` fields the rule uses
                 (subset of ``("history", "center")``).
     history_window: sliding-window length for history-buffered rules.
+    invariants: declared output invariants the adversarial self-audit
+                (``repro.audit``) asserts for this rule, each relative
+                to the *effective* stack the rule body consumed (after
+                staleness reweighting / history smoothing):
+                  "finite"  output has no NaN/inf (every rule);
+                  "hull"    per coordinate within [min, max] over
+                            workers;
+                  "trimmed" per coordinate within the f-trimmed range
+                            [sorted[f], sorted[n-1-f]];
+                  "convex"  ``selected`` is a convex-combination
+                            certificate — nonnegative, sums to 1, and
+                            ``gradient == selected @ stack``.
+                Composites propagate their base's declaration; rules
+                that legitimately break a property (e.g. the momentum-
+                carried clipping center can leave the current hull)
+                must not declare it.
     doc:        one-line human description.
     """
 
@@ -185,6 +201,7 @@ class AggregatorRule:
     stateful: bool = False
     state_fields: Tuple[str, ...] = ()
     history_window: Optional[int] = None
+    invariants: Tuple[str, ...] = ("finite", "hull")
     doc: str = ""
 
     @property
@@ -215,7 +232,9 @@ _POPULATED = False
 
 def register_rule(name: str, *, min_n: Callable[[int], int],
                   byzantine_resilient: bool = True, stateful: bool = False,
-                  state_fields: Tuple[str, ...] = (), doc: str = ""):
+                  state_fields: Tuple[str, ...] = (),
+                  invariants: Tuple[str, ...] = ("finite", "hull"),
+                  doc: str = ""):
     """Decorator registering a dense-path rule implementation.
 
     Args:
@@ -224,6 +243,8 @@ def register_rule(name: str, *, min_n: Callable[[int], int],
       byzantine_resilient: True when the rule is proven resilient.
       stateful: True when the dense fn threads an ``AggState``.
       state_fields: ``AggState`` fields the rule uses.
+      invariants: declared output invariants the self-audit asserts
+        (see :class:`AggregatorRule`).
       doc: one-line description for listings.
 
     Returns:
@@ -237,7 +258,8 @@ def register_rule(name: str, *, min_n: Callable[[int], int],
             name=name, min_n=min_n, dense_fn=fn,
             tree_fn=_TREE_IMPLS.get(name),
             byzantine_resilient=byzantine_resilient, stateful=stateful,
-            state_fields=state_fields, doc=doc or (fn.__doc__ or "").strip()
+            state_fields=state_fields, invariants=invariants,
+            doc=doc or (fn.__doc__ or "").strip()
             .split("\n")[0])
         return fn
     return deco
@@ -289,6 +311,10 @@ def _bulyan_rule(name: str) -> AggregatorRule:
     return AggregatorRule(
         name=name, min_n=lambda f: 4 * f + 3, dense_fn=make_bulyan(base),
         tree_fn=tree_fn, byzantine_resilient=True,
+        # phase 2 averages a sorted window of the phase-1 picks — inside
+        # the workers' per-coordinate hull, but `selected` marks the
+        # theta picks with 1.0 (not convex weights)
+        invariants=("finite", "hull"),
         doc=f"Bulyan({base}) — recursive selection + trimmed "
             f"coordinate phase")
 

@@ -86,22 +86,28 @@ class AggSpec:
         """
         return resolve_rule(self.gar, history_window=self.history_window)
 
-    def validate(self, n_workers: Optional[int] = None) -> None:
+    def validate(self, n_workers: Optional[int] = None, *,
+                 distributed: bool = False) -> None:
         """Quorum-check this spec (both historic call forms).
 
         Args:
           n_workers: worker count to check against.  ``None`` falls back
             to ``self.n_workers`` (the single-host form
-            ``spec.validate()``).  Passing it explicitly is the sharded
-            trace-time form (historic ``DistByzantineSpec.validate``),
-            which additionally requires the rule to have a distributed
-            (tree) implementation — e.g. ``bulyan-brute`` is valid on
-            the flat path but rejected here.
+            ``spec.validate()``); the sharded step builders pass the
+            batch's worker axis at trace time instead (the historic
+            ``DistByzantineSpec.validate`` form).
+          distributed: when True, additionally require the rule to have
+            a distributed (tree) implementation — e.g. ``bulyan-brute``
+            is valid on the flat path but rejected here.  This used to
+            be inferred from ``n_workers is not None``, which wrongly
+            forced the tree requirement onto flat specs validated with
+            an explicit worker count; the sharded step builders now opt
+            in explicitly.
 
         Returns:
-          None.  Raises ``KeyError`` for an unknown rule (or, on the
-          sharded form, a rule without a tree implementation) and
-          ``ValueError`` for a quorum violation or a missing count.
+          None.  Raises ``KeyError`` for an unknown rule (or, with
+          ``distributed=True``, a rule without a tree implementation)
+          and ``ValueError`` for a quorum violation or a missing count.
         """
         n = self.n_workers if n_workers is None else n_workers
         if n is None:
@@ -109,7 +115,7 @@ class AggSpec:
                 "validate() needs n_workers — set it on the spec or pass "
                 "it explicitly")
         check_quorum(self.gar, n, self.f_declared,
-                     distributed=n_workers is not None,
+                     distributed=distributed,
                      history_window=self.history_window)
 
 

@@ -89,6 +89,15 @@ def stale_scale(state: AggState, weight: str = "inv",
     exactly 1, so every base rule reproduces its synchronous output
     bitwise.
 
+    The raw difference is clamped to ``>= 0`` before weighting: a bus
+    whose version stamps outrun the carried ``step`` (a
+    checkpoint-restored bus paired with a freshly zeroed state, or a
+    restored ``step`` against freshly allocated slots) would otherwise
+    produce negative staleness and ``inv`` weights above 1 — violating
+    the never-amplify contract the paragraph above promises (and, for
+    ``s <= -1``, a sign flip).  A worker from the future is treated as
+    exactly fresh.
+
     Args:
       state: carried ``AggState`` with an allocated ``bus``.
       weight: staleness-weight schedule (see :func:`stale_weights`).
@@ -97,7 +106,7 @@ def stale_scale(state: AggState, weight: str = "inv",
     Returns:
       ``(n,)`` float32 scale ``w / max(w)`` (n = ``len(bus.versions)``).
     """
-    staleness = state.step - state.bus.versions
+    staleness = jnp.maximum(state.step - state.bus.versions, 0)
     w = stale_weights(staleness, weight, lam)
     return w / jnp.max(w)
 
@@ -155,5 +164,8 @@ def make_stale(name: str, base: AggregatorRule, weight: str = "inv",
         name=name, min_n=base.min_n, dense_fn=dense, tree_fn=tree_fn,
         byzantine_resilient=base.byzantine_resilient, stateful=True,
         state_fields=state_fields, history_window=base.history_window,
+        # the base's invariants hold relative to the *reweighted* stack
+        # it consumed (the audit recomputes the staleness scale)
+        invariants=base.invariants,
         doc=f"staleness-weighted ({weight}) worker stack fed to "
             f"{base.name}")

@@ -1,0 +1,36 @@
+"""Adversarial self-audit: corner sweeps + empirical leeway certification.
+
+Two harnesses keep the repo's Byzantine-resilience claims honest:
+
+* ``repro.audit.sweep`` — a property-based corner sweep walking every
+  registered aggregation rule (base rules, ``bulyan-*`` / ``buffered-*``
+  / ``stale-*`` composites, ``centered_clip_momentum``) against every
+  registered attack over a (n, f, tau, schedule) grid, asserting the
+  shared contracts: declared output invariants (``repro.audit
+  .invariants``), the canonical quorum error message, bitwise
+  base-equality of uniformly-stale composites, the bounded-staleness
+  delivery guarantee, and the kernels' fp32-accumulation contract under
+  bf16 inputs.
+* ``repro.audit.leeway`` — the empirical leeway meter: measures each
+  rule's ε-poisoning margin as model dimension grows and certifies the
+  paper's two scaling laws (Krum-family leeway Omega(sqrt(d)), Bulyan's
+  relative margin O(1/sqrt(d))) against slope windows and a checked-in
+  JSON baseline artifact.
+
+Both are CLIs (``python -m repro.audit.sweep`` / ``...audit.leeway``;
+``scripts/run_audit.py`` chains them) and both *collect* violations
+instead of raising, so one run reports every broken corner.  The CI
+``audit`` job runs the quick grid on every push; docs/audit.md holds
+the invariant catalogue and the measurement methodology.
+"""
+from repro.audit import invariants, leeway, sweep
+from repro.audit.invariants import (check_quorum_contract,
+                                    check_rule_output, effective_stack)
+from repro.audit.leeway import certify, measure_leeway
+from repro.audit.sweep import (AuditReport, SweepConfig, audit_roster,
+                               run_sweep)
+
+__all__ = ["AuditReport", "SweepConfig", "audit_roster", "certify",
+           "check_quorum_contract", "check_rule_output",
+           "effective_stack", "invariants", "leeway", "measure_leeway",
+           "run_sweep", "sweep"]

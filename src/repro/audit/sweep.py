@@ -1,0 +1,476 @@
+"""The adversarial corner sweep: every rule x attack x (n, f, tau) grid.
+
+One driver walks **every** rule the registry resolves — the paper's base
+rules, the ``bulyan-*`` / ``buffered-*`` / ``stale-*`` composite
+families, ``centered_clip_momentum`` — against every registered attack
+over a grid of worker counts, Byzantine bounds, staleness patterns and
+delay schedules, and asserts the shared contracts at each corner:
+
+* **output invariants** — each rule's declared ``invariants`` tuple,
+  checked against the effective stack it consumed
+  (``repro.audit.invariants``);
+* **quorum contract** — below ``min_n(f)`` every resolvable name raises
+  the one canonical ``check_quorum`` ValueError; tree-less rules raise
+  the canonical KeyError only under ``distributed=True``;
+* **identity contract** — a ``stale-*`` composite over a uniformly
+  stale (or uniformly fresh, or clock-skewed *negative*-staleness)
+  committee is **bitwise** equal to its base rule;
+* **staleness bound** — simulated delivery under every (tau, schedule)
+  corner keeps ``staleness_excess`` at zero, and ``tau = 0`` delivers
+  everyone every step;
+* **fp32 accumulation** — the Pallas kernels match their fp32 oracles
+  on bf16 inputs (``repro.kernels.probes``), and the sharded engine's
+  bf16 tree path agrees with the fp32 flat reference while preserving
+  leaf dtypes.
+
+Violations are collected (not raised), so one run reports every broken
+corner.  CLI: ``python -m repro.audit.sweep [--quick]`` exits non-zero
+on any violation — the CI audit job's first gate.  Methodology notes in
+docs/audit.md.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.agg.registry import resolve_rule, rule_names
+from repro.agg.state import init_state
+from repro.audit.invariants import (check_quorum_contract,
+                                    check_rule_output, effective_stack)
+from repro.core.attacks import get_attack
+
+__all__ = ["AuditReport", "SweepConfig", "audit_roster", "main",
+           "run_sweep"]
+
+#: attacks whose submissions depend on their own previous ones
+_DELAY_ATTACKS = ("stale_replay", "slow_drift")
+
+#: per-attack keyword arguments used by the sweep (the omniscient
+#: attacks use the paper's closed-form gamma — one cheap pass per call)
+_ATTACK_KW: Dict[str, dict] = {
+    "omniscient_lp": {"gamma": "closed", "margin": 1.0},
+    "omniscient_linf": {"gamma": "closed", "direction": "anti"},
+    "ipm": {"eps": 0.7},
+    "stale_replay": {"scale": -1.5},
+    "slow_drift": {"eps": 0.8},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepConfig:
+    """Static shape of one corner sweep.
+
+    Args:
+      d: coordinate count of the synthetic stacks (small on purpose —
+        the contracts are dimension-free; the leeway meter owns the
+        d-scaling story).
+      fs: Byzantine bounds to probe.
+      extra_n: worker-count offsets above each rule's ``min_n(f)``.
+      attacks: attack names (``"none"`` = all-honest committee).
+      steps: aggregation steps per stateful case (staleness patterns
+        and history windows need a few steps to become non-trivial).
+      taus: staleness bounds of the delivery simulation — ints and/or
+        per-worker tuples.
+      schedules: delay schedules of the delivery simulation.
+      quorum_fs: Byzantine bounds of the quorum-contract section.
+      seed: base PRNG seed (folded per case — the sweep is
+        deterministic end to end).
+    """
+
+    d: int = 16
+    fs: Tuple[int, ...] = (1, 2)
+    extra_n: Tuple[int, ...] = (0, 2)
+    attacks: Tuple[str, ...] = ("none", "omniscient_lp", "omniscient_linf",
+                                "alie", "ipm", "signflip", "random",
+                                "zero", "mimic", "stale_replay",
+                                "slow_drift")
+    steps: int = 3
+    taus: Tuple = (0, 2, (0, 1, 3, 0, 2, 1, 3))
+    schedules: Tuple[str, ...] = ("fixed", "random")
+    quorum_fs: Tuple[int, ...] = (1, 2, 3)
+    seed: int = 0
+
+
+#: the CI-speed variant: one (n, f) corner, the attack families that
+#: exercise distinct code paths, two steps
+QUICK = SweepConfig(fs=(1,), extra_n=(2,),
+                    attacks=("none", "omniscient_lp", "alie", "signflip",
+                             "stale_replay"),
+                    steps=2, taus=(0, 2), quorum_fs=(1, 2))
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Outcome of one sweep: per-section case counts and violations.
+
+    Args:
+      cases: total corners evaluated.
+      violations: every violation string collected across sections.
+      sections: section name -> (cases, violations) counts.
+    """
+
+    cases: int = 0
+    violations: List[str] = dataclasses.field(default_factory=list)
+    sections: Dict[str, Tuple[int, int]] = dataclasses.field(
+        default_factory=dict)
+
+    def ok(self) -> bool:
+        """True when no corner violated any contract.
+
+        Args:
+          (none).
+
+        Returns:
+          ``not self.violations``.
+        """
+        return not self.violations
+
+    def add(self, section: str, cases: int,
+            violations: Sequence[str]) -> None:
+        """Fold one section's outcome into the report.
+
+        Args:
+          section: section name.
+          cases: corners the section evaluated.
+          violations: violations the section collected.
+
+        Returns:
+          None.
+        """
+        self.cases += cases
+        self.violations.extend(violations)
+        got = self.sections.get(section, (0, 0))
+        self.sections[section] = (got[0] + cases,
+                                  got[1] + len(violations))
+
+
+def audit_roster() -> List[str]:
+    """Every rule family the sweep audits, composites included.
+
+    Args:
+      (none).
+
+    Returns:
+      Sorted rule names: all statically registered rules plus one or
+      more representatives of each composite family (``bulyan-*``,
+      ``buffered-*``, ``stale-*``, ``stale-exp-*`` and their nestings)
+      — every name resolves through ``repro.agg.resolve_rule``.
+    """
+    bases = rule_names()
+    roster = list(bases)
+    roster += ["bulyan-krum", "bulyan-geomed"]
+    roster += ["buffered-cwmed", "buffered-krum", "buffered-trimmed_mean",
+               "buffered-bulyan-krum"]
+    roster += [f"stale-{b}" for b in bases]
+    roster += ["stale-bulyan-krum", "stale-buffered-cwmed",
+               "stale-exp-krum", "stale-exp-cwmed"]
+    return sorted(roster)
+
+
+def _stale_pattern(n: int, s: int) -> np.ndarray:
+    """Deterministic non-uniform staleness pattern for step ``s``."""
+    return (np.arange(n) + s) % 3
+
+
+def _case_key(base_key, *parts) -> jnp.ndarray:
+    """Per-case PRNG key — crc32, not ``hash()`` (which is salted)."""
+    tag = zlib.crc32("/".join(str(p) for p in parts).encode())
+    return jax.random.fold_in(base_key, tag & 0x7FFFFFFF)
+
+
+def _case_violations(name: str, attack: str, n: int, f: int,
+                     cfg: SweepConfig, key) -> Tuple[int, List[str]]:
+    """Run one (rule, attack, n, f) corner for ``cfg.steps`` steps."""
+    rule = resolve_rule(name)
+    attack_fn = None if attack == "none" else get_attack(attack)
+    kw = dict(_ATTACK_KW.get(attack, {}))
+    steps = cfg.steps if rule.stateful else 1
+    out: List[str] = []
+    state = (init_state(rule, jnp.zeros((n, cfg.d), jnp.float32))
+             if rule.stateful else None)
+    history: List[np.ndarray] = []
+    prev = None
+    for s in range(steps):
+        k = jax.random.fold_in(key, s)
+        honest = (jax.random.normal(k, (n - f, cfg.d), jnp.float32)
+                  * 0.5 + 1.0)
+        if attack_fn is None or f == 0:
+            full = jnp.concatenate(
+                [honest,
+                 jax.random.normal(jax.random.fold_in(k, 1),
+                                   (f, cfg.d), jnp.float32) * 0.5 + 1.0])
+        else:
+            if attack in _DELAY_ATTACKS:
+                kw.update(prev=prev, step=s)
+            byz = attack_fn(honest, f, jax.random.fold_in(k, 2), **kw)
+            prev = byz
+            full = jnp.concatenate([honest, byz])
+        label = f"{name}/{attack}/n{n}/f{f}/s{s}"
+        if rule.stateful:
+            if "bus" in rule.state_fields:
+                pat = _stale_pattern(n, s)
+                state = state._replace(
+                    step=jnp.asarray(s, jnp.int32),
+                    bus=state.bus._replace(
+                        versions=jnp.asarray(s - pat, jnp.int32)))
+            else:
+                state = state._replace(step=jnp.asarray(s, jnp.int32))
+            res, new_state = rule.dense_fn(full, f, state)
+        else:
+            res = rule.dense_fn(full, f)
+            new_state = state
+        if "bus" in rule.state_fields:
+            from repro.agg.staleness import stale_scale
+            weight = "exp" if "-exp-" in name else "inv"
+            scale = np.asarray(stale_scale(state, weight), np.float32)
+            history.append(np.asarray(full, np.float32) * scale[:, None])
+        else:
+            history.append(np.asarray(full, np.float32))
+        eff = effective_stack(rule, full, state, history=history)
+        out += check_rule_output(rule, res.gradient, res.selected, eff, f,
+                                 label)
+        state = new_state
+    return steps, out
+
+
+def _invariant_section(cfg: SweepConfig, report: AuditReport) -> None:
+    """Rule x attack x (n, f) output-invariant grid."""
+    key = jax.random.PRNGKey(cfg.seed)
+    for name in audit_roster():
+        rule = resolve_rule(name)
+        for f in cfg.fs:
+            for extra in cfg.extra_n:
+                # at least two honest workers: average's quorum is 1,
+                # but attacks need a non-degenerate honest committee
+                n = max(rule.min_n(f), f + 2) + extra
+                for attack in cfg.attacks:
+                    k = _case_key(key, name, attack, n, f)
+                    cases, violations = _case_violations(
+                        name, attack, n, f, cfg, k)
+                    report.add("invariants", cases, violations)
+
+
+def _quorum_section(cfg: SweepConfig, report: AuditReport) -> None:
+    """Canonical quorum errors on both sides of every threshold."""
+    from repro.agg.specs import AggSpec, check_quorum
+    for name in audit_roster():
+        rule = resolve_rule(name)
+        for f in cfg.quorum_fs:
+            report.add("quorum", 1, check_quorum_contract(name, f))
+        # distributed opt-in: tree-less rules raise the canonical
+        # KeyError; rules with a tree implementation pass
+        f = cfg.quorum_fs[0]
+        n = rule.min_n(f)
+        violations: List[str] = []
+        try:
+            check_quorum(name, n, f, distributed=True)
+            if rule.tree_fn is None:
+                violations.append(
+                    f"{name}: tree-less rule accepted distributed=True")
+        except KeyError as e:
+            if rule.tree_fn is not None:
+                violations.append(
+                    f"{name}: has a tree implementation but "
+                    f"distributed=True raised {e}")
+        # the satellite-1 regression: a *flat* spec validated with an
+        # explicit worker count must never demand a tree implementation
+        try:
+            AggSpec(f=f, gar=name).validate(n)
+        except Exception as e:
+            violations.append(
+                f"{name}: flat validate(n={n}) wrongly raised "
+                f"{type(e).__name__}: {e}")
+        report.add("quorum", 2, violations)
+
+
+def _identity_section(cfg: SweepConfig, report: AuditReport) -> None:
+    """stale-* over a uniform committee is bitwise its base rule."""
+    key = jax.random.PRNGKey(cfg.seed + 1)
+    bases = [b for b in rule_names()
+             if not resolve_rule(b).stateful] + ["bulyan-krum"]
+    f = cfg.fs[0]
+    # uniform staleness 0 / 3 and a clock-skewed *negative* staleness
+    # (restored bus ahead of a zeroed step counter) — all must clamp or
+    # normalize to scale exactly 1.0
+    for uniform_s in (0, 3, -2):
+        for weight in ("", "exp-"):
+            for base in bases:
+                base_rule = resolve_rule(base)
+                n = base_rule.min_n(f) + 1
+                k = _case_key(key, base, weight, uniform_s)
+                full = (jax.random.normal(k, (n, cfg.d), jnp.float32)
+                        * 0.5 + 1.0)
+                stale_name = f"stale-{weight}{base}"
+                rule = resolve_rule(stale_name)
+                state = init_state(rule, full)
+                step = 5
+                state = state._replace(
+                    step=jnp.asarray(step, jnp.int32),
+                    bus=state.bus._replace(versions=jnp.full(
+                        (n,), step - uniform_s, jnp.int32)))
+                got, _ = rule.dense_fn(full, f, state)
+                want = base_rule.dense_fn(full, f)
+                violations: List[str] = []
+                if not np.array_equal(np.asarray(got.gradient),
+                                      np.asarray(want.gradient)):
+                    err = float(np.max(np.abs(
+                        np.asarray(got.gradient, np.float32)
+                        - np.asarray(want.gradient, np.float32))))
+                    violations.append(
+                        f"{stale_name}: uniform staleness {uniform_s} "
+                        f"not bitwise-equal to {base} (max abs diff "
+                        f"{err:.3g})")
+                if not np.array_equal(np.asarray(got.selected),
+                                      np.asarray(want.selected)):
+                    violations.append(
+                        f"{stale_name}: uniform staleness {uniform_s} "
+                        f"changes the selection vs {base}")
+                report.add("identity", 1, violations)
+
+
+def _staleness_section(cfg: SweepConfig, report: AuditReport) -> None:
+    """Delivery simulation: the declared bound is never exceeded."""
+    from repro.dist.async_train import (delivery_mask, init_bus,
+                                        resolve_tau, staleness_excess,
+                                        update_bus)
+    n, steps = 7, 12
+    key = jax.random.PRNGKey(cfg.seed + 2)
+    for tau in cfg.taus:
+        tau_arr = resolve_tau(tau, n)
+        for schedule in cfg.schedules:
+            violations: List[str] = []
+            bus = init_bus(jnp.zeros((n, cfg.d), jnp.float32))
+            for t in range(steps):
+                grads = jax.random.normal(
+                    jax.random.fold_in(key, t), (n, cfg.d), jnp.float32)
+                mask = delivery_mask(t, bus.versions, tau_arr,
+                                     schedule=schedule, seed=cfg.seed)
+                if int(np.max(np.asarray(tau_arr))) == 0 \
+                        and not bool(np.all(np.asarray(mask))):
+                    violations.append(
+                        f"tau=0/{schedule}: worker held back at step {t} "
+                        f"(sync special case broken)")
+                bus = update_bus(bus, grads, t, mask)
+                excess = np.asarray(staleness_excess(bus, t, tau_arr))
+                if (excess > 0).any():
+                    violations.append(
+                        f"tau={tau}/{schedule}: staleness bound exceeded "
+                        f"at step {t} by {excess.tolist()}")
+            report.add("staleness", steps, violations)
+
+
+def _fp32_section(cfg: SweepConfig, report: AuditReport) -> None:
+    """bf16-input fp32-accumulation contract: kernels and tree path."""
+    from repro.dist.robust import distributed_aggregate
+    from repro.kernels.probes import (coord_fp32_contract_error,
+                                      gram_fp32_contract_error)
+    tol = 1e-4
+    violations: List[str] = []
+    for d, block_d in ((512, 256), (1536, 512)):
+        err = gram_fp32_contract_error(n=8, d=d, block_d=block_d,
+                                       seed=cfg.seed)
+        if err > tol:
+            violations.append(
+                f"pairwise_gram bf16 d={d} block={block_d}: rel err "
+                f"{err:.3g} > {tol} — fp32 accumulation broken?")
+        err = coord_fp32_contract_error(theta=9, f=2, d=d,
+                                        block_d=block_d, seed=cfg.seed)
+        if err > tol:
+            violations.append(
+                f"bulyan_select bf16 d={d} block={block_d}: rel err "
+                f"{err:.3g} > {tol} — fp32 accumulation broken?")
+    report.add("fp32", 4, violations)
+
+    # sharded engine: bf16 tree, default (fp32) accumulation — must
+    # match the flat fp32 reference and keep the leaf dtype
+    key = jax.random.PRNGKey(cfg.seed + 3)
+    n, f = 11, 2  # bulyan quorum: 4f + 3
+    leaves = {
+        "w": jax.random.normal(key, (n, 24, 8)).astype(jnp.bfloat16),
+        "b": jax.random.normal(jax.random.fold_in(key, 1),
+                               (n, 40)).astype(jnp.bfloat16),
+    }
+    flat = jnp.concatenate(
+        [leaves["b"].astype(jnp.float32).reshape(n, -1),
+         leaves["w"].astype(jnp.float32).reshape(n, -1)], axis=1)
+    for gar in ("krum", "cwmed", "bulyan-krum"):
+        violations = []
+        agg, _ = distributed_aggregate(leaves, f, gar)
+        got = jnp.concatenate(
+            [agg["b"].astype(jnp.float32).reshape(-1),
+             agg["w"].astype(jnp.float32).reshape(-1)])
+        want = resolve_rule(gar).dense_fn(flat, f).gradient
+        scale = max(float(jnp.max(jnp.abs(want))), 1.0)
+        err = float(jnp.max(jnp.abs(got - want))) / scale
+        if err > 1e-2:  # bf16 output quantization, fp32 accumulation
+            violations.append(
+                f"{gar}: bf16 tree path deviates from fp32 flat "
+                f"reference by rel {err:.3g}")
+        for name, leaf in agg.items():
+            if leaf.dtype != jnp.bfloat16:
+                violations.append(
+                    f"{gar}: leaf {name!r} came back {leaf.dtype}, "
+                    f"input dtype not preserved")
+        report.add("fp32", 1, violations)
+
+
+def run_sweep(cfg: Optional[SweepConfig] = None) -> AuditReport:
+    """Run every section of the corner sweep.
+
+    Args:
+      cfg: sweep shape (``None`` = the full default grid; pass
+        :data:`QUICK` for the CI-speed variant).
+
+    Returns:
+      The populated :class:`AuditReport` (violations collected, never
+      raised).
+    """
+    cfg = cfg or SweepConfig()
+    report = AuditReport()
+    _quorum_section(cfg, report)
+    _identity_section(cfg, report)
+    _staleness_section(cfg, report)
+    _fp32_section(cfg, report)
+    _invariant_section(cfg, report)
+    return report
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    """CLI entry: run the sweep and report violations.
+
+    Args:
+      argv: command-line arguments (``None`` = ``sys.argv[1:]``);
+        ``--quick`` selects the CI grid, ``--seed`` reseeds the
+        deterministic case PRNG.
+
+    Returns:
+      Process exit code — the number of violations (0 = all contracts
+      hold).
+    """
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI grid: one (n, f) corner per rule")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base PRNG seed of the synthetic stacks")
+    args = ap.parse_args(argv)
+    cfg = dataclasses.replace(QUICK if args.quick else SweepConfig(),
+                              seed=args.seed)
+    report = run_sweep(cfg)
+    for section, (cases, bad) in sorted(report.sections.items()):
+        print(f"audit/{section}: {cases} cases, {bad} violations",
+              flush=True)
+    for v in report.violations:
+        print(f"VIOLATION: {v}", flush=True)
+    print(f"audit/total: {report.cases} cases, "
+          f"{len(report.violations)} violations", flush=True)
+    return len(report.violations)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -122,6 +122,7 @@ def brute_subset_diameters(dist2: jnp.ndarray, n: int, f: int) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 @register_rule("average", min_n=lambda f: 1, byzantine_resilient=False,
+               invariants=("finite", "hull", "convex"),
                doc="arithmetic mean (not Byzantine-resilient)")
 def average(grads: jnp.ndarray, f: int = 0) -> AggResult:
     """Arithmetic mean — the non-robust reference (paper Fig. 2/3)."""
@@ -131,6 +132,7 @@ def average(grads: jnp.ndarray, f: int = 0) -> AggResult:
 
 
 @register_rule("krum", min_n=lambda f: 2 * f + 3,
+               invariants=("finite", "hull", "convex"),
                doc="Blanchard et al. 2017")
 def krum(grads: jnp.ndarray, f: int) -> AggResult:
     """Krum (Blanchard et al., 2017): output the vector with the smallest
@@ -147,6 +149,7 @@ def krum(grads: jnp.ndarray, f: int) -> AggResult:
 
 
 @register_rule("multikrum", min_n=lambda f: 2 * f + 3,
+               invariants=("finite", "hull", "convex"),
                doc="average of m best Krum scores")
 def multikrum(grads: jnp.ndarray, f: int, m: Optional[int] = None) -> AggResult:
     """Multi-Krum: average of the m best-scored vectors (m = n - f - 2 by
@@ -163,6 +166,7 @@ def multikrum(grads: jnp.ndarray, f: int, m: Optional[int] = None) -> AggResult:
 
 
 @register_rule("geomed", min_n=lambda f: 2 * f + 1,
+               invariants=("finite", "hull", "convex"),
                doc="medoid with smallest index")
 def geomed(grads: jnp.ndarray, f: int = 0) -> AggResult:
     """GeoMed — the Medoid with the smallest index (paper §2.3.3)."""
@@ -175,6 +179,7 @@ def geomed(grads: jnp.ndarray, f: int = 0) -> AggResult:
 
 
 @register_rule("brute", min_n=lambda f: 2 * f + 1,
+               invariants=("finite", "hull", "convex"),
                doc="min-diameter subset average (small n only)")
 def brute(grads: jnp.ndarray, f: int) -> AggResult:
     """Brute (paper §2.3.1): average of the most clumped (n-f)-subset,
@@ -197,6 +202,7 @@ def brute(grads: jnp.ndarray, f: int) -> AggResult:
 
 
 @register_rule("cwmed", min_n=lambda f: 2 * f + 1,
+               invariants=("finite", "hull", "trimmed"),
                doc="coordinate-wise median")
 def cwmed(grads: jnp.ndarray, f: int = 0) -> AggResult:
     """Coordinate-wise median (Yin et al., 2018) — beyond-paper baseline."""
@@ -207,6 +213,7 @@ def cwmed(grads: jnp.ndarray, f: int = 0) -> AggResult:
 
 
 @register_rule("trimmed_mean", min_n=lambda f: 2 * f + 1,
+               invariants=("finite", "hull", "trimmed"),
                doc="coordinate-wise trimmed mean")
 def trimmed_mean(grads: jnp.ndarray, f: int) -> AggResult:
     """Coordinate-wise f-trimmed mean (Yin et al., 2018) — beyond-paper."""
@@ -220,6 +227,7 @@ def trimmed_mean(grads: jnp.ndarray, f: int) -> AggResult:
 
 
 @register_rule("centered_clip", min_n=lambda f: 2 * f + 1,
+               invariants=("finite", "hull"),
                doc="iterative centered clipping")
 def centered_clip(grads: jnp.ndarray, f: int, tau: float = 10.0,
                   iters: int = 3) -> AggResult:

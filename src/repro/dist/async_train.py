@@ -58,7 +58,8 @@ from repro.dist.train import _global_norm, make_loss_fn
 from repro.optim import Optimizer
 
 __all__ = ["GradientBus", "delivery_mask", "init_async_state", "init_bus",
-           "make_async_train_step", "resolve_tau", "update_bus"]
+           "make_async_train_step", "resolve_tau", "staleness_excess",
+           "update_bus"]
 
 
 class GradientBus(NamedTuple):
@@ -208,6 +209,31 @@ def update_bus(bus: GradientBus, grads: Any, step,
         arrival_step=jnp.where(deliver, step, bus.arrival_step))
 
 
+def staleness_excess(bus: GradientBus, step, tau: jnp.ndarray) -> jnp.ndarray:
+    """Per-worker overshoot of the declared staleness bound.
+
+    The bounded-staleness contract — every delay schedule must keep each
+    honest worker's slot age at or below its ``tau_w`` — is exactly the
+    kind of threshold invariant real Byzantine-tolerant systems break
+    silently (the motivation of ``repro.audit``).  This helper makes the
+    bound *observable*: the async step emits ``max(excess)`` as the
+    ``staleness_excess`` metric every step, and the audit sweep asserts
+    it stays 0 across the whole (tau, schedule) grid.
+
+    Args:
+      bus: the post-update bus of the current step.
+      step: () int32 global async step the bus was just updated at.
+      tau: ``(n,)`` int32 per-worker bounds (``resolve_tau``).
+
+    Returns:
+      ``(n,)`` int32 ``max(0, (step - versions) - tau)`` — 0 everywhere
+      when the contract holds (a lying Byzantine version stamp shows up
+      as 0 too: the master can only observe the stamped age).
+    """
+    staleness = jnp.asarray(step, jnp.int32) - bus.versions
+    return jnp.maximum(staleness - tau, 0)
+
+
 def init_async_state(spec: AggSpec, params: Any, n_workers: int) -> AggState:
     """Zeroed ``AggState`` carrying the bus for the async sharded path.
 
@@ -284,7 +310,7 @@ def make_async_train_step(cfg, spec: AggSpec, optimizer: Optimizer,
         tokens, labels = batch["tokens"], batch["labels"]
         extra = batch.get("extra")
         n = tokens.shape[0]
-        spec.validate(n)
+        spec.validate(n, distributed=True)
         f = spec.f
         n_h = n - f
         tau = resolve_tau(spec.async_tau, n)
@@ -346,6 +372,8 @@ def make_async_train_step(cfg, spec: AggSpec, optimizer: Optimizer,
                            else jnp.zeros((), jnp.float32)),
             "staleness_mean": jnp.mean(staleness.astype(jnp.float32)),
             "staleness_max": jnp.max(staleness).astype(jnp.float32),
+            "staleness_excess": jnp.max(
+                staleness_excess(bus, t, tau)).astype(jnp.float32),
             "delivered": jnp.sum(deliver).astype(jnp.float32),
         }
         return new_params, new_opt, metrics, new_state

@@ -37,7 +37,9 @@ __all__ = ["DistByzantineSpec", "init_agg_state", "make_loss_fn",
 
 #: deprecation alias — the sharded spec is now the unified
 #: ``repro.agg.AggSpec`` (same fields plus the single-host ones);
-#: ``spec.validate(n_workers)`` keeps its historic trace-time call form.
+#: ``spec.validate(n_workers)`` keeps its historic trace-time call form
+#: (the step builders additionally pass ``distributed=True`` to demand a
+#: tree implementation — no longer inferred from the explicit count).
 DistByzantineSpec = AggSpec
 
 
@@ -119,7 +121,7 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
         tokens, labels = batch["tokens"], batch["labels"]
         extra = batch.get("extra")
         n = tokens.shape[0]
-        spec.validate(n)
+        spec.validate(n, distributed=True)
         f = spec.f
         n_h = n - f
 

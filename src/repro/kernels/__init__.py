@@ -7,14 +7,15 @@
                    network and windowed prefix sums (VPU, gather-free).
 
 ``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles used by the
-shape/dtype-sweep tests.
+shape/dtype-sweep tests, and ``probes`` the fp32-accumulation contract
+probes the adversarial self-audit (``repro.audit``) sweeps.
 """
 from repro.kernels.bulyan_select import bulyan_select
 from repro.kernels.coord_stats import coord_stats
 from repro.kernels.pairwise_gram import (pairwise_gram,
                                          pairwise_gram_partial,
                                          pairwise_gram_tree)
-from repro.kernels import ops, ref
+from repro.kernels import ops, probes, ref
 
 __all__ = ["bulyan_select", "coord_stats", "ops", "pairwise_gram",
-           "pairwise_gram_partial", "pairwise_gram_tree", "ref"]
+           "pairwise_gram_partial", "pairwise_gram_tree", "probes", "ref"]

@@ -1,0 +1,96 @@
+"""fp32-accumulation contract probes for the kernel layer.
+
+Every kernel in this package promises the same numeric contract the
+sharded engine documents (``repro.dist.robust``): inputs may stream from
+HBM in their native dtype (bf16 at production scale), but *accumulation
+happens in fp32 on-chip* and the result is an fp32 artifact.  A kernel
+edit that silently accumulates in bf16 would pass shape checks and most
+value tests at small d — and quietly widen the very ε-leeway the paper
+bounds, because distance-based selection then runs on distances whose
+error grows with d.
+
+These probes make the contract empirically checkable: each one feeds the
+kernel a bf16 (or otherwise low-precision) worker stack and compares it
+against the pure-jnp fp32 oracle *on the identical quantized values* —
+so the only admissible difference is summation order, and the relative
+error bound can stay tight no matter how large d grows.  The adversarial
+self-audit (``repro.audit.sweep``) runs them across a (n, d, block_d)
+grid; ``tests/test_kernels.py`` pins the small cases.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bulyan import coordinate_phase
+from repro.kernels.bulyan_select import bulyan_select
+from repro.kernels.pairwise_gram import pairwise_gram
+
+__all__ = ["coord_fp32_contract_error", "gram_fp32_contract_error"]
+
+
+def _rel_err(got: jnp.ndarray, want: jnp.ndarray) -> float:
+    scale = float(jnp.max(jnp.abs(want))) or 1.0
+    return float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                 - want.astype(jnp.float32)))) / scale
+
+
+def gram_fp32_contract_error(n: int = 8, d: int = 4096,
+                             dtype=jnp.bfloat16, *, block_d: int = 1024,
+                             seed: int = 0,
+                             interpret: Optional[bool] = None) -> float:
+    """Max relative error of the Pallas distance pass vs the fp32 oracle.
+
+    Args:
+      n: worker count of the probe stack.
+      d: coordinate count — spanning several ``block_d`` tiles so the
+        cross-tile accumulation path is exercised (where a bf16
+        accumulator would lose bits).
+      dtype: input dtype streamed to the kernel (default bf16, the
+        production HBM format).
+      block_d: kernel VMEM tile width.
+      seed: PRNG seed of the probe stack.
+      interpret: Pallas interpret override (``None`` = auto; the
+        interpreter runs the identical accumulation code path on CPU).
+
+    Returns:
+      ``max |kernel - oracle| / max |oracle|`` where the oracle casts
+      the *same* quantized inputs to fp32 before the Gram contraction —
+      ~1e-6 when the kernel honours the fp32-accumulation contract,
+      O(1e-2) and growing with d if it ever accumulates in bf16.
+    """
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, d),
+                          jnp.float32).astype(dtype)
+    got = pairwise_gram(g, block_d=block_d, interpret=interpret)
+    from repro.kernels.ref import pairwise_gram_ref
+    want = pairwise_gram_ref(g.astype(jnp.float32))
+    return _rel_err(got, want)
+
+
+def coord_fp32_contract_error(theta: int = 9, f: int = 2, d: int = 4096,
+                              dtype=jnp.bfloat16, *, block_d: int = 1024,
+                              seed: int = 0,
+                              interpret: Optional[bool] = None) -> float:
+    """Max relative error of the Bulyan coordinate kernel vs fp32 oracle.
+
+    Args:
+      theta: selected-stack height (phase-1 output size).
+      f: Byzantine bound (``beta = theta - 2f`` window).
+      d: coordinate count across several tiles.
+      dtype: input dtype streamed to the kernel.
+      block_d: kernel VMEM tile width.
+      seed: PRNG seed of the probe stack.
+      interpret: Pallas interpret override (``None`` = auto).
+
+    Returns:
+      Max relative error against ``repro.core.bulyan.coordinate_phase``
+      run on the fp32 cast of the identical quantized stack — tight when
+      the kernel's window sums accumulate fp32.
+    """
+    s = jax.random.normal(jax.random.PRNGKey(seed), (theta, d),
+                          jnp.float32).astype(dtype)
+    got = bulyan_select(s, f, block_d=block_d, interpret=interpret)
+    want = coordinate_phase(s.astype(jnp.float32), f)
+    return _rel_err(got, want)

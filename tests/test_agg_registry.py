@@ -97,12 +97,40 @@ class TestSpecUnification:
             spec.f = 3
 
     def test_sharded_validate_requires_tree_impl(self):
-        """The trace-time form keeps the historic distributed check:
-        bulyan-brute is fine on the flat path, rejected on the sharded
-        one (its phase 1 needs the gradients, not just distances)."""
+        """Only the *explicit* distributed opt-in rejects tree-less
+        rules: bulyan-brute is fine on the flat path, rejected on the
+        sharded one (its phase 1 needs the gradients, not just
+        distances)."""
         AggSpec(n_workers=7, f=1, gar="bulyan-brute").validate()
         with pytest.raises(KeyError, match="distance-only"):
-            DistByzantineSpec(f=1, gar="bulyan-brute").validate(7)
+            DistByzantineSpec(f=1, gar="bulyan-brute").validate(
+                7, distributed=True)
+
+    @pytest.mark.parametrize("gar", ["bulyan-brute", "stale-bulyan-brute",
+                                     "bulyan-cwmed"])
+    def test_flat_validate_with_explicit_n_stays_flat(self, gar):
+        """Regression: ``validate(n)`` used to infer ``distributed``
+        from ``n_workers is not None``, wrongly demanding a tree
+        implementation from flat specs validated with an explicit
+        worker count."""
+        AggSpec(f=1, gar=gar).validate(8)           # must not raise
+        with pytest.raises(KeyError, match="bulyan"):
+            AggSpec(f=1, gar=gar).validate(8, distributed=True)
+
+    def test_distributed_keyerror_messages(self):
+        """Both canonical distributed KeyError texts survive: the
+        bulyan-family hint and the generic no-tree-implementation."""
+        with pytest.raises(KeyError,
+                           match="needs a distance-only base"):
+            check_quorum("stale-bulyan-brute", 9, 1, distributed=True)
+        rule_names()  # populate the registry
+        from repro.agg.registry import RULES
+        treeless = [n for n, r in RULES.items() if r.tree_fn is None]
+        for name in treeless:
+            with pytest.raises(KeyError,
+                               match="no distributed"):
+                check_quorum(name, resolve_rule(name).min_n(1), 1,
+                             distributed=True)
 
 
 class TestDenseTreeParity:

@@ -18,11 +18,12 @@ def test_front_door_exists():
     assert (REPO / "docs" / "dist-runtime.md").exists()
     assert (REPO / "docs" / "serving.md").exists()
     assert (REPO / "docs" / "async-runtime.md").exists()
+    assert (REPO / "docs" / "audit.md").exists()
 
 
 @pytest.mark.parametrize("doc", ["README.md", "docs/dist-runtime.md",
                                  "docs/aggregation.md", "docs/serving.md",
-                                 "docs/async-runtime.md"])
+                                 "docs/async-runtime.md", "docs/audit.md"])
 def test_doc_lints_clean(doc):
     errors = docs_lint.lint_file(REPO / doc)
     assert not errors, "\n".join(errors)
@@ -48,7 +49,11 @@ def test_lint_catches_bad_snippet(tmp_path):
                                  "repro.serving", "repro.dist.serve",
                                  "repro.dist.serve_robust",
                                  "repro.dist.async_train",
-                                 "repro.agg.staleness"])
+                                 "repro.agg.staleness",
+                                 "repro.audit", "repro.audit.invariants",
+                                 "repro.audit.sweep",
+                                 "repro.audit.leeway",
+                                 "repro.kernels.probes"])
 def test_public_symbols_documented(pkg):
     """Acceptance criterion: every public symbol exported by repro.dist
     (and repro.kernels, and the serving stack) carries a docstring, and
@@ -87,6 +92,20 @@ def test_async_doc_covers_exported_api():
     missing = sorted(n for n in names if n not in text)
     assert not missing, f"docs/async-runtime.md misses exported API: " \
                         f"{missing}"
+
+
+def test_audit_doc_covers_exported_api():
+    """docs/audit.md must not drift from the audit API surface: every
+    symbol exported by repro.audit and its submodules has to be
+    mentioned by name."""
+    import importlib
+    text = (REPO / "docs" / "audit.md").read_text()
+    names = set()
+    for pkg in ("repro.audit", "repro.audit.invariants",
+                "repro.audit.sweep", "repro.audit.leeway"):
+        names.update(importlib.import_module(pkg).__all__)
+    missing = sorted(n for n in names if n not in text)
+    assert not missing, f"docs/audit.md misses exported API: {missing}"
 
 
 def test_changes_log_mentions_every_pr():
