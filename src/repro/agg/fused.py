@@ -1,0 +1,130 @@
+"""``fused-<base>`` registry composites: GARs lowered onto the megakernel.
+
+``repro.kernels.fused_agg`` executes distance accumulation, selection and
+the coordinate phase of a base rule in one Pallas sweep.  This module
+wraps that kernel in the registry's :class:`AggregatorRule` shape so the
+fused lowering is just another name — ``resolve_rule("fused-krum")`` —
+with the base rule's quorum, resilience flag and invariant contract, and
+therefore flows through ``distributed_aggregate``, the audit roster and
+the dryrun CLI without any API change.
+
+Two entry points:
+
+  * :func:`make_fused` builds the composite rule for one ``fused-<base>``
+    name (called lazily from ``registry.resolve_rule``);
+  * :func:`fused_name` maps an arbitrary GAR name onto its fused
+    counterpart (``"krum" -> "fused-krum"``,
+    ``"stale-krum" -> "stale-fused-krum"``) or ``None`` when the rule has
+    no fused lowering — which is how ``distance_backend="fused"`` reroutes
+    rules inside the engine while leaving e.g. ``brute`` untouched.
+
+The dense path runs the megakernel on the flat ``(n, d)`` stack.  The
+tree path mirrors the unfused composites: a single-leaf tree still takes
+the megakernel, while multi-leaf trees reuse the context's distance
+accumulation (whatever backend produced it), derive selection weights
+once via ``fused_agg.select_weights``, and run the fused
+select+coordinate pair kernel per leaf.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.agg.registry import AggregatorRule, TreeAgg, resolve_rule
+from repro.core.types import AggResult
+from repro.kernels.fused_agg import (FUSED_MODES, fused_aggregate,
+                                     fused_coordinate, select_weights)
+
+__all__ = ["FUSED_BASES", "fused_name", "make_fused"]
+
+#: base GAR names with a fused lowering (== fused_agg.FUSED_MODES)
+FUSED_BASES = FUSED_MODES
+
+#: stateful wrapper prefixes fused_name recurses through, longest first
+#: so "stale-exp-" is not mis-split as "stale-" + "exp-..."
+_WRAPPER_PREFIXES = ("stale-exp-", "stale-inv-", "stale-", "buffered-")
+
+
+def fused_name(gar: str) -> Optional[str]:
+    """Map a GAR name to its fused counterpart, or ``None``.
+
+    Args:
+      gar: any registry-resolvable GAR name — a base rule, a
+        ``stale-`` / ``buffered-`` composite, or an already-fused name
+        (idempotent).
+
+    Returns:
+      The ``fused-``-prefixed name whose composite lowers the same rule
+      onto the megakernel (wrapper prefixes are preserved:
+      ``"stale-krum" -> "stale-fused-krum"``), or ``None`` when the base
+      has no fused lowering (``brute``, ``average``, ``centered_clip``,
+      ...).
+    """
+    if gar.startswith("fused-"):
+        return gar
+    for prefix in _WRAPPER_PREFIXES:
+        if gar.startswith(prefix):
+            inner = fused_name(gar[len(prefix):])
+            return None if inner is None else prefix + inner
+    return f"fused-{gar}" if gar in FUSED_BASES else None
+
+
+def make_fused(name: str) -> AggregatorRule:
+    """Build the ``fused-<base>`` composite rule.
+
+    Args:
+      name: full composite name, e.g. ``"fused-bulyan-krum"``.
+
+    Returns:
+      An :class:`AggregatorRule` with the base rule's quorum/resilience
+      contract whose dense path is the megakernel and whose tree path is
+      the select+coordinate pair kernel.
+
+    Raises:
+      KeyError: when the base has no fused lowering.
+    """
+    base = name[len("fused-"):]
+    if base not in FUSED_BASES:
+        raise KeyError(f"unknown GAR {name!r}: no fused lowering for "
+                       f"{base!r}; have {sorted(FUSED_BASES)}")
+    base_rule = resolve_rule(base)
+
+    def dense_fn(grads: jnp.ndarray, f: int) -> AggResult:
+        agg, sel, scores = fused_aggregate(grads, f, mode=base)
+        return AggResult(agg.astype(grads.dtype),
+                         sel.astype(grads.dtype),
+                         scores.astype(grads.dtype))
+
+    def tree_fn(ctx) -> TreeAgg:
+        leaves = ctx.leaves
+        n, f = ctx.n, ctx.f
+        if len(leaves) == 1:
+            leaf = leaves[0]
+            agg, sel, scores = fused_aggregate(
+                leaf.reshape(n, -1), f, mode=base)
+            return TreeAgg([agg.reshape(leaf.shape[1:]).astype(ctx.cdt)],
+                           sel.astype(ctx.cdt), scores.astype(ctx.cdt))
+        if base in ("cwmed", "trimmed_mean"):
+            w, sel, scores = None, ctx.uniform(), ctx.zeros()
+        else:
+            w, sel, scores = select_weights(
+                ctx.dists().astype(jnp.float32), n, f, base)
+            sel = sel[0].astype(ctx.cdt)
+            scores = scores[0].astype(ctx.cdt)
+        grad = [fused_coordinate(leaf.reshape(n, -1), w, f, mode=base)
+                .reshape(leaf.shape[1:]).astype(ctx.cdt)
+                for leaf in leaves]
+        return TreeAgg(grad, sel, scores)
+
+    return AggregatorRule(
+        name=name,
+        min_n=base_rule.min_n,
+        dense_fn=dense_fn,
+        tree_fn=tree_fn,
+        byzantine_resilient=base_rule.byzantine_resilient,
+        invariants=base_rule.invariants,
+        doc=(f"{base} lowered onto the fused Pallas megakernel "
+             f"(repro.kernels.fused_agg): distance accumulation, "
+             f"selection and coordinate phase in one sweep."),
+    )

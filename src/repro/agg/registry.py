@@ -21,7 +21,10 @@ buffer of ``repro.agg.buffered`` (Alistarh et al. 2018-style), and
 ``"stale-<base>"`` (``"stale-inv-"`` / ``"stale-exp-"`` select the
 weight schedule) reweights the worker stack by per-worker staleness read
 from the carried ``GradientBus`` before delegating to the base
-(``repro.agg.staleness`` — the asynchronous runtime's rule family).
+(``repro.agg.staleness`` — the asynchronous runtime's rule family), and
+``"fused-<base>"`` lowers the base onto the single-sweep Pallas
+megakernel (``repro.agg.fused`` / ``repro.kernels.fused_agg``) with the
+base's quorum and invariant contract intact.
 Resolved composites are cached, so repeated lookups are dict hits.
 """
 from __future__ import annotations
@@ -353,9 +356,10 @@ def resolve_rule(name: str,
 
     Args:
       name: rule name — a registered key, ``"bulyan-<base>"``,
-        ``"buffered-<base>"``, or ``"stale[-inv|-exp]-<base>"`` (bases
-        may nest, e.g. ``"buffered-bulyan-krum"``,
-        ``"stale-exp-bulyan-krum"``, ``"stale-buffered-cwmed"``).
+        ``"buffered-<base>"``, ``"stale[-inv|-exp]-<base>"``, or
+        ``"fused-<base>"`` (bases may nest, e.g.
+        ``"buffered-bulyan-krum"``, ``"stale-exp-bulyan-krum"``,
+        ``"stale-fused-krum"``).
       history_window: sliding-window length for ``buffered-*`` rules
         (``None`` = :data:`DEFAULT_HISTORY_WINDOW`; ignored otherwise;
         forwarded through ``stale-*`` to a buffered base).
@@ -381,10 +385,14 @@ def resolve_rule(name: str,
         # stale_replay *attack* name passed as a GAR) must hit the
         # unknown-name error below, not fall back to a default base
         rule = _stale_rule(name, window)
+    elif name.startswith("fused-"):
+        from repro.agg.fused import make_fused
+        rule = make_fused(name)
     else:
         raise KeyError(
             f"unknown GAR {name!r}; have {sorted(RULES)} plus "
-            f"'bulyan-<base>', 'buffered-<base>' and 'stale-<base>'")
+            f"'bulyan-<base>', 'buffered-<base>', 'stale-<base>' and "
+            f"'fused-<base>'")
     _COMPOSITES[key] = rule
     return rule
 

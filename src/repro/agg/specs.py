@@ -57,7 +57,7 @@ class AggSpec:
     attack_kwargs: tuple = ()          # (("gamma", 10.0), ...)
     declared_f: Optional[int] = None   # f the master *assumes* (>= actual)
     agg_dtype: str = "native"          # native | float32 | bfloat16
-    distance_backend: str = "auto"     # auto | xla | pallas
+    distance_backend: str = "auto"     # auto | xla | pallas | fused
     history_window: int = 4            # buffered-* window length
     seed: int = 0
     async_tau: "int | tuple" = 0       # bounded staleness (scalar or per-worker)

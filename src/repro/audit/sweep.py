@@ -1,8 +1,8 @@
 """The adversarial corner sweep: every rule x attack x (n, f, tau) grid.
 
 One driver walks **every** rule the registry resolves — the paper's base
-rules, the ``bulyan-*`` / ``buffered-*`` / ``stale-*`` composite
-families, ``centered_clip_momentum`` — against every registered attack
+rules, the ``bulyan-*`` / ``buffered-*`` / ``stale-*`` / ``fused-*``
+composite families, ``centered_clip_momentum`` — against every registered attack
 over a grid of worker counts, Byzantine bounds, staleness patterns and
 delay schedules, and asserts the shared contracts at each corner:
 
@@ -19,9 +19,10 @@ delay schedules, and asserts the shared contracts at each corner:
   corner keeps ``staleness_excess`` at zero, and ``tau = 0`` delivers
   everyone every step;
 * **fp32 accumulation** — the Pallas kernels match their fp32 oracles
-  on bf16 inputs (``repro.kernels.probes``), and the sharded engine's
-  bf16 tree path agrees with the fp32 flat reference while preserving
-  leaf dtypes.
+  on bf16 inputs (``repro.kernels.probes``, the fused megakernel
+  included), and the sharded engine's bf16 tree path — under the
+  ``xla`` *and* ``fused`` distance backends — agrees with the fp32
+  flat reference while preserving leaf dtypes.
 
 Violations are collected (not raised), so one run reports every broken
 corner.  CLI: ``python -m repro.audit.sweep [--quick]`` exits non-zero
@@ -159,9 +160,11 @@ def audit_roster() -> List[str]:
     Returns:
       Sorted rule names: all statically registered rules plus one or
       more representatives of each composite family (``bulyan-*``,
-      ``buffered-*``, ``stale-*``, ``stale-exp-*`` and their nestings)
-      — every name resolves through ``repro.agg.resolve_rule``.
+      ``buffered-*``, ``stale-*``, ``stale-exp-*``, ``fused-*`` and
+      their nestings) — every name resolves through
+      ``repro.agg.resolve_rule``.
     """
+    from repro.agg.fused import FUSED_BASES
     bases = rule_names()
     roster = list(bases)
     roster += ["bulyan-krum", "bulyan-geomed"]
@@ -170,6 +173,8 @@ def audit_roster() -> List[str]:
     roster += [f"stale-{b}" for b in bases]
     roster += ["stale-bulyan-krum", "stale-buffered-cwmed",
                "stale-exp-krum", "stale-exp-cwmed"]
+    roster += [f"fused-{b}" for b in FUSED_BASES]
+    roster += ["stale-fused-krum"]
     return sorted(roster)
 
 
@@ -293,7 +298,8 @@ def _identity_section(cfg: SweepConfig, report: AuditReport) -> None:
     """stale-* over a uniform committee is bitwise its base rule."""
     key = jax.random.PRNGKey(cfg.seed + 1)
     bases = [b for b in rule_names()
-             if not resolve_rule(b).stateful] + ["bulyan-krum"]
+             if not resolve_rule(b).stateful] + ["bulyan-krum",
+                                                 "fused-krum"]
     f = cfg.fs[0]
     # uniform staleness 0 / 3 and a clock-skewed *negative* staleness
     # (restored bus ahead of a zeroed step counter) — all must clamp or
@@ -369,6 +375,7 @@ def _fp32_section(cfg: SweepConfig, report: AuditReport) -> None:
     """bf16-input fp32-accumulation contract: kernels and tree path."""
     from repro.dist.robust import distributed_aggregate
     from repro.kernels.probes import (coord_fp32_contract_error,
+                                      fused_fp32_contract_error,
                                       gram_fp32_contract_error)
     tol = 1e-4
     violations: List[str] = []
@@ -385,7 +392,16 @@ def _fp32_section(cfg: SweepConfig, report: AuditReport) -> None:
             violations.append(
                 f"bulyan_select bf16 d={d} block={block_d}: rel err "
                 f"{err:.3g} > {tol} — fp32 accumulation broken?")
-    report.add("fp32", 4, violations)
+        for mode in ("bulyan-krum", "trimmed_mean"):
+            err = fused_fp32_contract_error(n=11, f=2, d=d, mode=mode,
+                                            block_d=block_d,
+                                            seed=cfg.seed)
+            if err > tol:
+                violations.append(
+                    f"fused_aggregate[{mode}] bf16 d={d} "
+                    f"block={block_d}: rel err {err:.3g} > {tol} — "
+                    f"fp32 accumulation broken?")
+    report.add("fp32", 8, violations)
 
     # sharded engine: bf16 tree, default (fp32) accumulation — must
     # match the flat fp32 reference and keep the leaf dtype
@@ -400,24 +416,29 @@ def _fp32_section(cfg: SweepConfig, report: AuditReport) -> None:
         [leaves["b"].astype(jnp.float32).reshape(n, -1),
          leaves["w"].astype(jnp.float32).reshape(n, -1)], axis=1)
     for gar in ("krum", "cwmed", "bulyan-krum"):
-        violations = []
-        agg, _ = distributed_aggregate(leaves, f, gar)
-        got = jnp.concatenate(
-            [agg["b"].astype(jnp.float32).reshape(-1),
-             agg["w"].astype(jnp.float32).reshape(-1)])
-        want = resolve_rule(gar).dense_fn(flat, f).gradient
-        scale = max(float(jnp.max(jnp.abs(want))), 1.0)
-        err = float(jnp.max(jnp.abs(got - want))) / scale
-        if err > 1e-2:  # bf16 output quantization, fp32 accumulation
-            violations.append(
-                f"{gar}: bf16 tree path deviates from fp32 flat "
-                f"reference by rel {err:.3g}")
-        for name, leaf in agg.items():
-            if leaf.dtype != jnp.bfloat16:
+        # "auto" is the historic xla-reference case; "fused" reroutes
+        # the rule onto the megakernel composite — both must track the
+        # flat fp32 reference and preserve leaf dtypes
+        for backend in ("auto", "fused"):
+            violations = []
+            agg, _ = distributed_aggregate(leaves, f, gar,
+                                           distance_backend=backend)
+            got = jnp.concatenate(
+                [agg["b"].astype(jnp.float32).reshape(-1),
+                 agg["w"].astype(jnp.float32).reshape(-1)])
+            want = resolve_rule(gar).dense_fn(flat, f).gradient
+            scale = max(float(jnp.max(jnp.abs(want))), 1.0)
+            err = float(jnp.max(jnp.abs(got - want))) / scale
+            if err > 1e-2:  # bf16 output quantization, fp32 accumulation
                 violations.append(
-                    f"{gar}: leaf {name!r} came back {leaf.dtype}, "
-                    f"input dtype not preserved")
-        report.add("fp32", 1, violations)
+                    f"{gar}[{backend}]: bf16 tree path deviates from "
+                    f"fp32 flat reference by rel {err:.3g}")
+            for name, leaf in agg.items():
+                if leaf.dtype != jnp.bfloat16:
+                    violations.append(
+                        f"{gar}[{backend}]: leaf {name!r} came back "
+                        f"{leaf.dtype}, input dtype not preserved")
+            report.add("fp32", 1, violations)
 
 
 def run_sweep(cfg: Optional[SweepConfig] = None) -> AuditReport:

@@ -48,7 +48,16 @@ distance-based GAR, and it has two interchangeable implementations behind
             CI exercises the identical code path;
   "auto"    "pallas" on TPU when a mesh with a non-trivial model axis is
             threaded through; "xla" everywhere else (see
-            ``resolve_distance_backend`` for why the mesh is required).
+            ``resolve_distance_backend`` for why the mesh is required);
+  "fused"   the single-sweep megakernel ``repro.kernels.fused_agg``:
+            ``distributed_aggregate`` reroutes the rule itself onto its
+            ``fused-<base>`` registry composite (``repro.agg.fused``),
+            so distance accumulation, selection and the coordinate phase
+            run in one ``pallas_call`` — no distance matrix round-trips
+            HBM on the flat/single-leaf path at all.  With a mesh whose
+            ``model`` axis is non-trivial the knob degrades to "pallas"
+            (the megakernel has no shard_map partitioning; the
+            shard-mapped pair path keeps the semantics).
 """
 from __future__ import annotations
 
@@ -115,20 +124,25 @@ def resolve_distance_backend(distance_backend: str, mesh=None) -> str:
     """Resolve the user-facing backend knob to a concrete implementation.
 
     Args:
-      distance_backend: ``"xla"`` | ``"pallas"`` | ``"auto"``.
+      distance_backend: ``"xla"`` | ``"pallas"`` | ``"fused"`` |
+        ``"auto"``.
       mesh: the mesh that would drive the shard-mapped Pallas pass
         (``None`` when the caller did not thread one through).
 
     Returns:
-      ``"xla"`` or ``"pallas"``.  ``"auto"`` picks the Pallas kernel
-      only on TPU *and* with a mesh whose ``model`` axis is non-trivial:
-      without the mesh the kernel would run as a plain ``pallas_call``
-      inside the GSPMD program, and XLA has no partitioning rule for it
-      — it would all-gather every model-sharded gradient leaf, exactly
-      the flat materialization this module forbids.  Off-TPU the clean
-      fallback is XLA (interpret mode is pure-Python per grid step).
-      An explicit ``"pallas"`` is honored as given — opting in without a
-      mesh is the single-device/debug path.
+      ``"xla"``, ``"pallas"`` or ``"fused"``.  ``"auto"`` picks the
+      Pallas kernel only on TPU *and* with a mesh whose ``model`` axis
+      is non-trivial: without the mesh the kernel would run as a plain
+      ``pallas_call`` inside the GSPMD program, and XLA has no
+      partitioning rule for it — it would all-gather every
+      model-sharded gradient leaf, exactly the flat materialization this
+      module forbids.  Off-TPU the clean fallback is XLA (interpret mode
+      is pure-Python per grid step).  An explicit ``"pallas"`` is
+      honored as given — opting in without a mesh is the
+      single-device/debug path.  ``"fused"`` degrades to ``"pallas"``
+      under a non-trivial ``model`` axis for the same partitioning
+      reason: the megakernel holds the whole d-tile sweep in one kernel,
+      so the shard-mapped pair path takes over on sharded meshes.
     """
     if distance_backend == "auto":
         if jax.default_backend() != "tpu":
@@ -137,10 +151,15 @@ def resolve_distance_backend(distance_backend: str, mesh=None) -> str:
         has_model = (mesh is not None
                      and mesh_axis_sizes(mesh).get("model", 1) > 1)
         return "pallas" if has_model else "xla"
+    if distance_backend == "fused":
+        from repro.dist.mesh import mesh_axis_sizes
+        has_model = (mesh is not None
+                     and mesh_axis_sizes(mesh).get("model", 1) > 1)
+        return "pallas" if has_model else "fused"
     if distance_backend not in ("xla", "pallas"):
         raise ValueError(
-            f"distance_backend must be 'xla', 'pallas' or 'auto', got "
-            f"{distance_backend!r}")
+            f"distance_backend must be 'xla', 'pallas', 'fused' or "
+            f"'auto', got {distance_backend!r}")
     return distance_backend
 
 
@@ -203,8 +222,9 @@ def pairwise_sq_dists_tree(tree: Any, compute_dtype=jnp.float32, *,
       compute_dtype: accumulation dtype of the ``"xla"`` backend and the
         dtype of the returned matrix (the Pallas kernel always
         accumulates fp32 internally).
-      distance_backend: ``"xla"`` | ``"pallas"`` | ``"auto"`` — see
-        ``resolve_distance_backend``.
+      distance_backend: ``"xla"`` | ``"pallas"`` | ``"fused"`` |
+        ``"auto"`` — see ``resolve_distance_backend`` (``"fused"`` uses
+        the same tiled Pallas accumulation here).
       mesh: optional device mesh.  With the Pallas backend and a mesh
         whose ``model`` axis is non-trivial, the kernel runs per model
         shard under ``shard_map`` and the (n, n) partials are psum'd;
@@ -219,7 +239,10 @@ def pairwise_sq_dists_tree(tree: Any, compute_dtype=jnp.float32, *,
     """
     n = _worker_count(tree)
     backend = resolve_distance_backend(distance_backend, mesh)
-    if backend == "pallas":
+    # the "fused" knob reroutes the *rule* (see distributed_aggregate);
+    # its distance matrix, when a rule still asks for one, is the same
+    # tiled Pallas accumulation
+    if backend in ("pallas", "fused"):
         from repro.dist.mesh import mesh_axis_sizes
         if mesh is not None and mesh_axis_sizes(mesh).get("model", 1) > 1:
             d2 = _pallas_sharded_dists(tree, mesh, block_d=block_d,
@@ -327,9 +350,14 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
         the accumulation dtype contract (see module docstring).
       window: coordinate-phase window for bulyan rules (see
         ``coordinate_phase_nd``).
-      distance_backend: ``"xla"`` | ``"pallas"`` | ``"auto"`` — how the
-        (n, n) distance matrix of distance-based rules is computed (see
-        ``pairwise_sq_dists_tree``; non-distance rules ignore it).
+      distance_backend: ``"xla"`` | ``"pallas"`` | ``"fused"`` |
+        ``"auto"`` — how the (n, n) distance matrix of distance-based
+        rules is computed (see ``pairwise_sq_dists_tree``; non-distance
+        rules ignore it).  ``"fused"`` additionally reroutes the rule
+        onto its ``fused-<base>`` megakernel composite when one exists
+        (``repro.agg.fused.fused_name``); rules without a fused lowering
+        (``brute``, ``average``, ...) run unchanged over the Pallas
+        distance pass.
       mesh: optional device mesh for the shard-mapped Pallas path.
       state: carried ``AggState`` for stateful rules (``None``
         zero-initializes one in-graph); stateless rules ignore it.
@@ -350,6 +378,11 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
     rule = resolve_rule(gar, history_window=history_window)
     check_quorum(gar, n, f, distributed=True,
                  history_window=history_window)
+    if resolve_distance_backend(distance_backend, mesh) == "fused":
+        from repro.agg.fused import fused_name
+        lowered = fused_name(gar)
+        if lowered is not None:
+            rule = resolve_rule(lowered, history_window=history_window)
     cdt = _compute_dtype(agg_dtype)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     out_dtypes = [leaf.dtype for leaf in leaves]

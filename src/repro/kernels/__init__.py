@@ -5,17 +5,30 @@
   bulyan_select  — fused coordinate-wise median + beta-closest-average
                    (Bulyan phase 2) with an unrolled odd-even sorting
                    network and windowed prefix sums (VPU, gather-free).
+  coord_stats    — coordinate-wise median + f-trimmed mean from one
+                   shared sort (the cwmed / trimmed_mean GARs).
+  fused_agg      — the megakernel: distance accumulation, in-kernel
+                   selection and the coordinate phase in one sweep
+                   (``distance_backend="fused"``), plus the per-leaf
+                   select+combine pair kernel for gradient trees.
 
-``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles used by the
+``common`` holds the shared primitives (sort network, window/median/trim
+combine bodies, interpret resolution) the kernels import *down* into,
+``ops`` the jit'd wrappers, ``ref`` the pure-jnp oracles used by the
 shape/dtype-sweep tests, and ``probes`` the fp32-accumulation contract
 probes the adversarial self-audit (``repro.audit``) sweeps.
 """
 from repro.kernels.bulyan_select import bulyan_select
+from repro.kernels.common import resolve_interpret
 from repro.kernels.coord_stats import coord_stats
+from repro.kernels.fused_agg import (fused_aggregate, fused_coordinate,
+                                     select_weights)
 from repro.kernels.pairwise_gram import (pairwise_gram,
                                          pairwise_gram_partial,
                                          pairwise_gram_tree)
 from repro.kernels import ops, probes, ref
 
-__all__ = ["bulyan_select", "coord_stats", "ops", "pairwise_gram",
-           "pairwise_gram_partial", "pairwise_gram_tree", "probes", "ref"]
+__all__ = ["bulyan_select", "coord_stats", "fused_aggregate",
+           "fused_coordinate", "ops", "pairwise_gram",
+           "pairwise_gram_partial", "pairwise_gram_tree", "probes", "ref",
+           "resolve_interpret", "select_weights"]

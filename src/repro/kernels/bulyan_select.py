@@ -22,61 +22,27 @@ this phase over the `model` mesh axis).
 from __future__ import annotations
 
 import functools
-from typing import List, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.pairwise_gram import resolve_interpret
+from repro.kernels.common import (bulyan_window, oe_sort_rows,
+                                  resolve_interpret)
 
 __all__ = ["bulyan_select"]
 
-
-def _oe_sort_rows(rows: List[jnp.ndarray]) -> List[jnp.ndarray]:
-    """Odd-even transposition sort of a list of (block,) rows (axis 0)."""
-    theta = len(rows)
-    rows = list(rows)
-    for p in range(theta):
-        for i in range(p % 2, theta - 1, 2):
-            a, b = rows[i], rows[i + 1]
-            rows[i] = jnp.minimum(a, b)
-            rows[i + 1] = jnp.maximum(a, b)
-    return rows
+# historic private alias: the sort network now lives in
+# repro.kernels.common (coord_stats and fused_agg share it)
+_oe_sort_rows = oe_sort_rows
 
 
 def _make_kernel(theta: int, f: int):
-    beta = theta - 2 * f
-
     def kernel(sel_ref, out_ref):
         x = sel_ref[...].astype(jnp.float32)          # (theta, block_d)
-        rows = _oe_sort_rows([x[i] for i in range(theta)])
-        med = rows[(theta - 1) // 2]                  # (block_d,)
-
-        if beta == theta:
-            acc = rows[0]
-            for r in rows[1:]:
-                acc = acc + r
-            out_ref[...] = (acc / beta)[None, :]
-            return
-
-        # prefix sums of sorted values and |sorted - med|
-        pref_v = [jnp.zeros_like(med)]
-        pref_d = [jnp.zeros_like(med)]
-        for r in rows:
-            pref_v.append(pref_v[-1] + r)
-            pref_d.append(pref_d[-1] + jnp.abs(r - med))
-
-        n_win = theta - beta + 1
-        best_dev = pref_d[beta] - pref_d[0]
-        best_sum = pref_v[beta] - pref_v[0]
-        for w in range(1, n_win):
-            dev = pref_d[w + beta] - pref_d[w]
-            s = pref_v[w + beta] - pref_v[w]
-            take = dev < best_dev                      # first-window tiebreak
-            best_dev = jnp.where(take, dev, best_dev)
-            best_sum = jnp.where(take, s, best_sum)
-        out_ref[...] = (best_sum / beta)[None, :]
+        rows = oe_sort_rows([x[i] for i in range(theta)])
+        out_ref[...] = bulyan_window(rows, f)[None, :]
 
     return kernel
 

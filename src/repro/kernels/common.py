@@ -1,0 +1,149 @@
+"""Shared building blocks of the Pallas aggregation kernels.
+
+Three kernels (``pairwise_gram``, ``bulyan_select``, ``coord_stats``)
+and the fused megakernel (``fused_agg``) share the same primitives: the
+interpret-mode resolution against the active jax backend, the unrolled
+odd-even transposition sorting network, and the per-tile combine bodies
+(Bulyan's beta-closest-to-median window, the coordinate-wise median and
+f-trimmed mean).  They used to be duplicated — or imported sideways,
+``coord_stats -> bulyan_select -> pairwise_gram`` — which made every new
+kernel deepen the chain.  This module is the single home: kernels import
+*down* into ``common`` only, never into each other.
+
+Every helper is shape-polymorphic over "rows": a list of equally-shaped
+arrays treated as axis 0 of a (rows, ...) stack.  Inside a kernel the
+rows are ``(block_d,)`` lane vectors; the same code runs on full
+``(d,)`` arrays under plain jit, which is what gives the fused kernel a
+bitwise-comparable out-of-kernel reference path.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bulyan_window", "coord_median", "coord_trimmed_mean",
+           "oe_sort_rows", "resolve_interpret"]
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Resolve the ``interpret`` knob against the active jax backend.
+
+    Args:
+      interpret: ``True`` / ``False`` to force, ``None`` to pick the
+        compiled kernel on TPU and the Pallas interpreter elsewhere
+        (CPU CI containers, GPU hosts).
+
+    Returns:
+      bool: the concrete interpret flag to hand to ``pl.pallas_call``.
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def oe_sort_rows(rows: List[jnp.ndarray]) -> List[jnp.ndarray]:
+    """Odd-even transposition sort across a list of rows (axis 0).
+
+    Fully unrolled for the static row count (worker counts are <= a few
+    dozen): no data-dependent control flow, exactly ``m * (m - 1) / 2``
+    min/max pairs on the row vectors — the TPU-safe substitute for
+    ``jnp.sort(axis=0)`` inside a kernel body.
+
+    Args:
+      rows: list of equally-shaped arrays, one per row of the stack
+        being sorted (``(block_d,)`` lane vectors inside a kernel).
+
+    Returns:
+      New list with the rows sorted ascending per element (the inputs
+      are not mutated).
+    """
+    m = len(rows)
+    rows = list(rows)
+    for p in range(m):
+        for i in range(p % 2, m - 1, 2):
+            a, b = rows[i], rows[i + 1]
+            rows[i] = jnp.minimum(a, b)
+            rows[i + 1] = jnp.maximum(a, b)
+    return rows
+
+
+def bulyan_window(rows: List[jnp.ndarray], f: int) -> jnp.ndarray:
+    """Bulyan's coordinate phase on an already-sorted row list.
+
+    Per element: the mean of the ``beta = theta - 2f`` sorted values
+    closest to the median.  The beta-closest set is a *contiguous
+    window* of the sorted order, so it reduces to prefix sums plus an
+    unrolled argmin over ``theta - beta + 1`` windows (first-window
+    tiebreak) — no gather, no second sort.
+
+    Args:
+      rows: ``theta`` sorted rows (ascending per element), e.g. the
+        output of :func:`oe_sort_rows`.
+      f: Byzantine bound; requires ``beta = theta - 2f >= 1``.
+
+    Returns:
+      One row: per element, the best window mean.
+    """
+    theta = len(rows)
+    beta = theta - 2 * f
+    med = rows[(theta - 1) // 2]
+
+    if beta == theta:
+        acc = rows[0]
+        for r in rows[1:]:
+            acc = acc + r
+        return acc / beta
+
+    # prefix sums of sorted values and |sorted - med|
+    pref_v = [jnp.zeros_like(med)]
+    pref_d = [jnp.zeros_like(med)]
+    for r in rows:
+        pref_v.append(pref_v[-1] + r)
+        pref_d.append(pref_d[-1] + jnp.abs(r - med))
+
+    n_win = theta - beta + 1
+    best_dev = pref_d[beta] - pref_d[0]
+    best_sum = pref_v[beta] - pref_v[0]
+    for w in range(1, n_win):
+        dev = pref_d[w + beta] - pref_d[w]
+        s = pref_v[w + beta] - pref_v[w]
+        take = dev < best_dev                      # first-window tiebreak
+        best_dev = jnp.where(take, dev, best_dev)
+        best_sum = jnp.where(take, s, best_sum)
+    return best_sum / beta
+
+
+def coord_median(rows: List[jnp.ndarray]) -> jnp.ndarray:
+    """Coordinate-wise median of an already-sorted row list.
+
+    Args:
+      rows: ``n`` sorted rows (ascending per element).
+
+    Returns:
+      One row: the middle row for odd ``n``, the mean of the two middle
+      rows for even ``n`` (matching ``jnp.median(axis=0)``).
+    """
+    n = len(rows)
+    if n % 2:
+        return rows[n // 2]
+    return 0.5 * (rows[n // 2 - 1] + rows[n // 2])
+
+
+def coord_trimmed_mean(rows: List[jnp.ndarray], f: int) -> jnp.ndarray:
+    """Coordinate-wise f-trimmed mean of an already-sorted row list.
+
+    Args:
+      rows: ``n`` sorted rows (ascending per element); requires
+        ``n > 2f``.
+      f: trim count per side.
+
+    Returns:
+      One row: the mean of rows ``f .. n - f - 1``.
+    """
+    n = len(rows)
+    acc = rows[f]
+    for r in rows[f + 1:n - f]:
+        acc = acc + r
+    return acc / (n - 2 * f)

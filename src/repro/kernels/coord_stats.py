@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.bulyan_select import _oe_sort_rows
-from repro.kernels.pairwise_gram import resolve_interpret
+from repro.kernels.common import (coord_median, coord_trimmed_mean,
+                                  oe_sort_rows, resolve_interpret)
 
 __all__ = ["coord_stats"]
 
@@ -29,16 +29,9 @@ __all__ = ["coord_stats"]
 def _make_kernel(n: int, f: int):
     def kernel(g_ref, med_ref, trim_ref):
         x = g_ref[...].astype(jnp.float32)            # (n, block_d)
-        rows = _oe_sort_rows([x[i] for i in range(n)])
-        if n % 2:
-            med = rows[n // 2]
-        else:
-            med = 0.5 * (rows[n // 2 - 1] + rows[n // 2])
-        acc = rows[f]
-        for r in rows[f + 1:n - f]:
-            acc = acc + r
-        med_ref[...] = med[None, :]
-        trim_ref[...] = (acc / (n - 2 * f))[None, :]
+        rows = oe_sort_rows([x[i] for i in range(n)])
+        med_ref[...] = coord_median(rows)[None, :]
+        trim_ref[...] = coord_trimmed_mean(rows, f)[None, :]
 
     return kernel
 

@@ -35,24 +35,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# historic import path: callers imported resolve_interpret from here
+# before it was hoisted to repro.kernels.common
+from repro.kernels.common import resolve_interpret
+
 __all__ = ["finalize_dists", "pairwise_gram", "pairwise_gram_partial",
            "pairwise_gram_tree", "resolve_interpret"]
-
-
-def resolve_interpret(interpret: Optional[bool]) -> bool:
-    """Resolve the ``interpret`` knob against the active jax backend.
-
-    Args:
-      interpret: ``True`` / ``False`` to force, ``None`` to pick the
-        compiled kernel on TPU and the Pallas interpreter elsewhere
-        (CPU CI containers, GPU hosts).
-
-    Returns:
-      bool: the concrete interpret flag to hand to ``pl.pallas_call``.
-    """
-    if interpret is None:
-        return jax.default_backend() != "tpu"
-    return bool(interpret)
 
 
 def _gram_kernel(g_ref, out_ref):

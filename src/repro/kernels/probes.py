@@ -28,7 +28,8 @@ from repro.core.bulyan import coordinate_phase
 from repro.kernels.bulyan_select import bulyan_select
 from repro.kernels.pairwise_gram import pairwise_gram
 
-__all__ = ["coord_fp32_contract_error", "gram_fp32_contract_error"]
+__all__ = ["coord_fp32_contract_error", "fused_fp32_contract_error",
+           "gram_fp32_contract_error"]
 
 
 def _rel_err(got: jnp.ndarray, want: jnp.ndarray) -> float:
@@ -93,4 +94,45 @@ def coord_fp32_contract_error(theta: int = 9, f: int = 2, d: int = 4096,
                           jnp.float32).astype(dtype)
     got = bulyan_select(s, f, block_d=block_d, interpret=interpret)
     want = coordinate_phase(s.astype(jnp.float32), f)
+    return _rel_err(got, want)
+
+
+def fused_fp32_contract_error(n: int = 11, f: int = 2, d: int = 4096,
+                              dtype=jnp.bfloat16, *,
+                              mode: str = "bulyan-krum",
+                              block_d: int = 1024, seed: int = 0,
+                              interpret: Optional[bool] = None) -> float:
+    """Max relative error of the fused megakernel vs the flat fp32 rule.
+
+    The megakernel (``repro.kernels.fused_agg``) chains all three
+    accumulation sites — the d-tiled Gram sweep, the selection-weight
+    contraction and the coordinate phase — inside one kernel, so a bf16
+    accumulator anywhere in the chain shows up here even if the
+    standalone kernel probes stay green.
+
+    Args:
+      n: worker count of the probe stack (``>= 4f + 3`` for the bulyan
+        modes).
+      f: Byzantine bound.
+      d: coordinate count spanning several ``block_d`` tiles.
+      dtype: input dtype streamed to the kernel (default bf16).
+      mode: fused mode to probe (any of
+        ``repro.kernels.fused_agg.FUSED_MODES``).
+      block_d: kernel VMEM tile width.
+      seed: PRNG seed of the probe stack.
+      interpret: Pallas interpret override (``None`` = auto).
+
+    Returns:
+      Max relative error of ``fused_aggregate`` on the quantized stack
+      against the registry's dense rule run on the fp32 cast of the
+      *identical* quantized values — tight (<= ~1e-4) under the fp32
+      contract, growing with d if any stage accumulates in bf16.
+    """
+    from repro.agg.registry import resolve_rule
+    from repro.kernels.fused_agg import fused_aggregate
+    g = jax.random.normal(jax.random.PRNGKey(seed), (n, d),
+                          jnp.float32).astype(dtype)
+    got, _, _ = fused_aggregate(g, f, mode=mode, block_d=block_d,
+                                interpret=interpret)
+    want = resolve_rule(mode).dense_fn(g.astype(jnp.float32), f).gradient
     return _rel_err(got, want)

@@ -343,9 +343,11 @@ def main() -> None:
                     choices=["native", "bfloat16", "float32"],
                     help="gradient dtype for the robust aggregation")
     ap.add_argument("--distance-backend", default="auto",
-                    choices=["auto", "xla", "pallas"],
+                    choices=["auto", "xla", "pallas", "fused"],
                     help="pairwise-distance implementation for distance-"
                          "based GARs (pallas = shard-mapped tiled kernel; "
+                         "fused = single-sweep megakernel, rules lowered "
+                         "onto their fused-<base> composites; "
                          "auto = pallas on TPU, xla elsewhere)")
     ap.add_argument("--async-tau", type=int, default=None,
                     help="lower the asynchronous bounded-staleness train "

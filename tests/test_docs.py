@@ -19,11 +19,13 @@ def test_front_door_exists():
     assert (REPO / "docs" / "serving.md").exists()
     assert (REPO / "docs" / "async-runtime.md").exists()
     assert (REPO / "docs" / "audit.md").exists()
+    assert (REPO / "docs" / "kernels.md").exists()
 
 
 @pytest.mark.parametrize("doc", ["README.md", "docs/dist-runtime.md",
                                  "docs/aggregation.md", "docs/serving.md",
-                                 "docs/async-runtime.md", "docs/audit.md"])
+                                 "docs/async-runtime.md", "docs/audit.md",
+                                 "docs/kernels.md"])
 def test_doc_lints_clean(doc):
     errors = docs_lint.lint_file(REPO / doc)
     assert not errors, "\n".join(errors)
@@ -53,7 +55,10 @@ def test_lint_catches_bad_snippet(tmp_path):
                                  "repro.audit", "repro.audit.invariants",
                                  "repro.audit.sweep",
                                  "repro.audit.leeway",
-                                 "repro.kernels.probes"])
+                                 "repro.kernels.probes",
+                                 "repro.kernels.common",
+                                 "repro.kernels.fused_agg",
+                                 "repro.agg.fused"])
 def test_public_symbols_documented(pkg):
     """Acceptance criterion: every public symbol exported by repro.dist
     (and repro.kernels, and the serving stack) carries a docstring, and
@@ -106,6 +111,20 @@ def test_audit_doc_covers_exported_api():
         names.update(importlib.import_module(pkg).__all__)
     missing = sorted(n for n in names if n not in text)
     assert not missing, f"docs/audit.md misses exported API: {missing}"
+
+
+def test_kernels_doc_covers_exported_api():
+    """docs/kernels.md must not drift from the kernel API surface: every
+    symbol exported by repro.kernels, repro.kernels.fused_agg and
+    repro.kernels.common has to be mentioned by name."""
+    import importlib
+    text = (REPO / "docs" / "kernels.md").read_text()
+    names = set()
+    for pkg in ("repro.kernels", "repro.kernels.fused_agg",
+                "repro.kernels.common"):
+        names.update(importlib.import_module(pkg).__all__)
+    missing = sorted(n for n in names if n not in text)
+    assert not missing, f"docs/kernels.md misses exported API: {missing}"
 
 
 def test_changes_log_mentions_every_pr():

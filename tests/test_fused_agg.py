@@ -1,0 +1,340 @@
+"""Fused-megakernel battery: parity, bitwise structure, tile edges.
+
+The fused backend has three contracts this file pins:
+
+* **parity** — ``fused_aggregate`` matches the registry's dense rule to
+  1e-4 for every mode it lowers, on the flat path and (through
+  ``distributed_aggregate``) on single- and multi-leaf trees;
+* **bitwise structure** — the megakernel and the unfused kernel pair
+  (``pairwise_gram_partial`` + ``select_weights`` +
+  ``fused_coordinate``) share one selection function and one combine
+  body, so at the same ``block_d`` their outputs are *bitwise* equal in
+  interpret mode — any drift means the two lowerings diverged;
+* **tile edges** — d below / at / just past the block width, odd and
+  even worker counts (the median branch), the Bulyan quorum edge
+  ``n = 4f + 3``, and the fp32-accumulation contract on bf16 inputs.
+
+Property-based cases (random (n, f, d) grids) run when ``hypothesis``
+is installed and skip cleanly otherwise — the CPU CI container does not
+ship it.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg.fused import FUSED_BASES, fused_name
+from repro.agg.registry import resolve_rule
+from repro.audit.sweep import audit_roster
+from repro.dist.robust import (distributed_aggregate,
+                               resolve_distance_backend)
+from repro.kernels.fused_agg import (COORD_MODES, DIST_MODES, FUSED_MODES,
+                                     fused_aggregate, fused_coordinate,
+                                     select_weights)
+from repro.kernels.pairwise_gram import (finalize_dists,
+                                         pairwise_gram_partial)
+from repro.kernels.probes import fused_fp32_contract_error
+
+KEY = jax.random.PRNGKey(23)
+
+
+def _stack(n, d, key=KEY, dtype=jnp.float32):
+    return (jax.random.normal(key, (n, d), jnp.float32) * 0.5
+            + 1.0).astype(dtype)
+
+
+def _tree(n, key=KEY, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"a": jax.random.normal(k1, (n, 7, 5)).astype(dtype),
+            "b": jax.random.normal(k2, (n, 130)).astype(dtype),  # pads
+            "c": jax.random.normal(k3, (n, 3)).astype(dtype)}
+
+
+class TestDenseParity:
+    """fused_aggregate vs the registry's dense rule, every mode."""
+
+    @pytest.mark.parametrize("mode", FUSED_MODES)
+    def test_matches_dense_rule(self, mode):
+        n, f = 11, 2
+        g = _stack(n, 300)
+        agg, sel, scores = fused_aggregate(g, f, mode=mode, block_d=128,
+                                           interpret=True)
+        want = resolve_rule(mode).dense_fn(g, f)
+        np.testing.assert_allclose(np.asarray(agg),
+                                   np.asarray(want.gradient), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sel),
+                                   np.asarray(want.selected), atol=1e-4)
+
+    @pytest.mark.parametrize("mode", ["krum", "multikrum", "geomed"])
+    def test_scores_match(self, mode):
+        n, f = 9, 1
+        g = _stack(n, 200)
+        _, _, scores = fused_aggregate(g, f, mode=mode, block_d=128,
+                                       interpret=True)
+        want = resolve_rule(mode).dense_fn(g, f).scores
+        np.testing.assert_allclose(np.asarray(scores), np.asarray(want),
+                                   rtol=1e-4)
+
+    @pytest.mark.parametrize("mode", FUSED_MODES)
+    def test_registry_composite_matches_base(self, mode):
+        n, f = 11, 2
+        g = _stack(n, 150)
+        got = resolve_rule(f"fused-{mode}").dense_fn(g, f)
+        want = resolve_rule(mode).dense_fn(g, f)
+        np.testing.assert_allclose(np.asarray(got.gradient),
+                                   np.asarray(want.gradient), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(got.selected),
+                                   np.asarray(want.selected), atol=1e-4)
+
+
+class TestBitwiseFusedVsUnfused:
+    """Megakernel == gram kernel + select_weights + pair kernel, bitwise."""
+
+    @pytest.mark.parametrize("mode", DIST_MODES)
+    def test_dist_modes_bitwise(self, mode):
+        n, f, d = 11, 2, 257
+        g = _stack(n, d)
+        agg, sel, scores = fused_aggregate(g, f, mode=mode, block_d=128,
+                                           interpret=True)
+        d2 = finalize_dists(pairwise_gram_partial(g, block_d=128,
+                                                  interpret=True))
+        w, sel2, scores2 = select_weights(d2, n, f, mode)
+        agg2 = fused_coordinate(g, w, f, mode=mode, block_d=128,
+                                interpret=True)
+        assert np.array_equal(np.asarray(agg), np.asarray(agg2))
+        assert np.array_equal(np.asarray(sel), np.asarray(sel2[0]))
+        assert np.array_equal(np.asarray(scores), np.asarray(scores2[0]))
+
+    @pytest.mark.parametrize("mode", COORD_MODES)
+    def test_coord_modes_bitwise(self, mode):
+        n, f, d = 9, 2, 257
+        g = _stack(n, d)
+        agg, _, _ = fused_aggregate(g, f, mode=mode, block_d=128,
+                                    interpret=True)
+        agg2 = fused_coordinate(g, None, f, mode=mode, block_d=128,
+                                interpret=True)
+        assert np.array_equal(np.asarray(agg), np.asarray(agg2))
+
+
+class TestTileBoundaries:
+    """d vs block_d edges, odd/even n, block-size invariance."""
+
+    @pytest.mark.parametrize("d", [1, 100, 128, 129, 257])
+    @pytest.mark.parametrize("mode", ["bulyan-krum", "cwmed"])
+    def test_d_edges(self, mode, d):
+        n, f = 11, 2
+        g = _stack(n, d)
+        agg, _, _ = fused_aggregate(g, f, mode=mode, block_d=128,
+                                    interpret=True)
+        want = resolve_rule(mode).dense_fn(g, f).gradient
+        assert agg.shape == (d,)
+        np.testing.assert_allclose(np.asarray(agg), np.asarray(want),
+                                   atol=1e-4)
+
+    @pytest.mark.parametrize("n", [5, 6])
+    def test_median_branch_odd_even(self, n):
+        g = _stack(n, 130)
+        agg, _, _ = fused_aggregate(g, 1, mode="cwmed", block_d=128,
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(agg),
+                                   np.asarray(jnp.median(g, axis=0)),
+                                   atol=1e-6)
+
+    @pytest.mark.parametrize("mode", ["krum", "bulyan-krum",
+                                      "trimmed_mean"])
+    def test_block_size_invariance(self, mode):
+        n, f, d = 11, 2, 300
+        g = _stack(n, d)
+        a128, _, _ = fused_aggregate(g, f, mode=mode, block_d=128,
+                                     interpret=True)
+        a512, _, _ = fused_aggregate(g, f, mode=mode, block_d=512,
+                                     interpret=True)
+        np.testing.assert_allclose(np.asarray(a128), np.asarray(a512),
+                                   atol=1e-5)
+
+
+class TestTreePaths:
+    """distance_backend="fused" through the sharded engine."""
+
+    @pytest.mark.parametrize("gar", ["krum", "multikrum", "geomed",
+                                     "cwmed", "trimmed_mean",
+                                     "bulyan-krum", "bulyan-geomed"])
+    def test_multi_leaf_matches_xla(self, gar):
+        n, f = 11, 2
+        tree = _tree(n)
+        ax, rx = distributed_aggregate(tree, f, gar,
+                                       distance_backend="xla")
+        af, rf = distributed_aggregate(tree, f, gar,
+                                       distance_backend="fused")
+        for x, y in zip(jax.tree_util.tree_leaves(ax),
+                        jax.tree_util.tree_leaves(af)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-4)
+        np.testing.assert_allclose(np.asarray(rx.selected),
+                                   np.asarray(rf.selected), atol=1e-4)
+
+    def test_single_leaf_takes_megakernel(self, monkeypatch):
+        import repro.agg.fused as fused_mod
+        n, f = 11, 2
+        tree = {"w": _tree(n)["b"]}
+        calls = []
+        orig = fused_mod.fused_aggregate
+        monkeypatch.setattr(
+            fused_mod, "fused_aggregate",
+            lambda *a, **k: calls.append(1) or orig(*a, **k))
+        a1, _ = distributed_aggregate(tree, f, "bulyan-krum",
+                                      distance_backend="fused")
+        assert calls, "single-leaf tree should route to the megakernel"
+        a2, _ = distributed_aggregate(tree, f, "bulyan-krum",
+                                      distance_backend="xla")
+        np.testing.assert_allclose(np.asarray(a1["w"]),
+                                   np.asarray(a2["w"]), atol=1e-4)
+
+    def test_fused_gar_name_direct(self):
+        n, f = 9, 1
+        tree = _tree(n)
+        a1, r1 = distributed_aggregate(tree, f, "fused-krum")
+        a2, r2 = distributed_aggregate(tree, f, "krum")
+        for x, y in zip(jax.tree_util.tree_leaves(a1),
+                        jax.tree_util.tree_leaves(a2)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-5)
+        assert np.array_equal(np.asarray(r1.selected),
+                              np.asarray(r2.selected))
+
+    def test_non_lowerable_rule_still_runs(self):
+        n, f = 9, 1
+        tree = _tree(n)
+        ab, _ = distributed_aggregate(tree, f, "brute",
+                                      distance_backend="fused")
+        ax, _ = distributed_aggregate(tree, f, "brute",
+                                      distance_backend="xla")
+        for x, y in zip(jax.tree_util.tree_leaves(ab),
+                        jax.tree_util.tree_leaves(ax)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                       atol=1e-4)
+
+    def test_backend_resolution(self):
+        assert resolve_distance_backend("fused") == "fused"
+        with pytest.raises(ValueError, match="fused"):
+            resolve_distance_backend("fussed")
+
+
+class TestRegistry:
+    """fused-* names resolve, reject, and appear in the audit roster."""
+
+    def test_quorum_carries_over(self):
+        assert resolve_rule("fused-krum").min_n(2) == 7
+        assert resolve_rule("fused-bulyan-krum").min_n(2) == 11
+        assert resolve_rule("fused-cwmed").min_n(2) == 5
+
+    def test_unknown_base_rejected(self):
+        with pytest.raises(KeyError, match="no fused lowering"):
+            resolve_rule("fused-brute")
+        with pytest.raises(KeyError, match="unknown GAR"):
+            resolve_rule("fusedkrum")
+
+    def test_canonical_quorum_message(self):
+        from repro.agg.specs import check_quorum
+        with pytest.raises(
+                ValueError,
+                match=r"fused-bulyan-krum requires n >= 11 for f=2, "
+                      r"got n=10"):
+            check_quorum("fused-bulyan-krum", 10, 2)
+
+    def test_audit_roster_contains_fused(self):
+        roster = audit_roster()
+        for base in FUSED_BASES:
+            assert f"fused-{base}" in roster
+        assert "stale-fused-krum" in roster
+
+    def test_fused_name_mapping(self):
+        assert fused_name("krum") == "fused-krum"
+        assert fused_name("bulyan-geomed") == "fused-bulyan-geomed"
+        assert fused_name("stale-krum") == "stale-fused-krum"
+        assert fused_name("stale-exp-cwmed") == "stale-exp-fused-cwmed"
+        assert fused_name("buffered-krum") == "buffered-fused-krum"
+        assert fused_name("brute") is None
+        assert fused_name("average") is None
+        assert fused_name("centered_clip") is None
+        assert fused_name("stale-brute") is None
+        # idempotent on already-fused names
+        assert fused_name("fused-krum") == "fused-krum"
+
+    def test_stale_fused_composite_runs(self):
+        from repro.agg.state import init_state
+        n, f = 9, 1
+        g = _stack(n, 40)
+        rule = resolve_rule("stale-fused-krum")
+        assert rule.stateful
+        state = init_state(rule, g)
+        res, _ = rule.dense_fn(g, f, state)
+        want = resolve_rule("fused-krum").dense_fn(g, f)
+        np.testing.assert_allclose(np.asarray(res.gradient),
+                                   np.asarray(want.gradient), atol=1e-5)
+
+
+class TestQuorumEdge:
+    """Bulyan at exactly n = 4f + 3 (theta = 2f + 3, beta = 3)."""
+
+    @pytest.mark.parametrize("f", [1, 2])
+    @pytest.mark.parametrize("mode", ["bulyan-krum", "bulyan-geomed"])
+    def test_exact_quorum_parity(self, mode, f):
+        n = 4 * f + 3
+        g = _stack(n, 200)
+        agg, sel, _ = fused_aggregate(g, f, mode=mode, block_d=128,
+                                      interpret=True)
+        want = resolve_rule(mode).dense_fn(g, f)
+        np.testing.assert_allclose(np.asarray(agg),
+                                   np.asarray(want.gradient), atol=1e-4)
+        assert np.array_equal(np.asarray(sel), np.asarray(want.selected))
+
+    def test_below_quorum_raises(self):
+        g = _stack(6, 40)
+        with pytest.raises(ValueError, match="bulyan requires n >= 4f"):
+            fused_aggregate(g, 1, mode="bulyan-krum", interpret=True)
+        with pytest.raises(ValueError, match="krum needs"):
+            fused_aggregate(g[:3], 1, mode="krum", interpret=True)
+        with pytest.raises(KeyError, match="unknown fused mode"):
+            fused_aggregate(g, 1, mode="brute", interpret=True)
+
+
+class TestFp32Contract:
+    """bf16 streams, fp32 accumulation — probed like the other kernels."""
+
+    @pytest.mark.parametrize("mode", ["bulyan-krum", "krum",
+                                      "trimmed_mean"])
+    def test_probe_under_tolerance(self, mode):
+        err = fused_fp32_contract_error(n=11, f=2, d=512, mode=mode,
+                                        block_d=256, interpret=True)
+        assert err < 1e-4
+
+
+class TestPropertyBased:
+    """Random (n, f, d) grids under hypothesis (skips when missing)."""
+
+    def test_random_shapes_parity(self):
+        pytest.importorskip("hypothesis")
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @settings(max_examples=8, deadline=None, derandomize=True)
+        @given(f=st.integers(0, 2), extra=st.integers(0, 3),
+               d=st.integers(1, 200), seed=st.integers(0, 2**31 - 1),
+               mode=st.sampled_from(FUSED_MODES))
+        def check(f, extra, d, seed, mode):
+            n = 4 * f + 3 + extra
+            g = _stack(n, d, key=jax.random.PRNGKey(seed))
+            agg, sel, _ = fused_aggregate(g, f, mode=mode, block_d=128,
+                                          interpret=True)
+            want = resolve_rule(mode).dense_fn(g, f)
+            np.testing.assert_allclose(np.asarray(agg),
+                                       np.asarray(want.gradient),
+                                       atol=1e-4)
+            # hull invariant: every coordinate within the worker range
+            lo = np.min(np.asarray(g), axis=0) - 1e-4
+            hi = np.max(np.asarray(g), axis=0) + 1e-4
+            a = np.asarray(agg)
+            assert ((a >= lo) & (a <= hi)).all()
+
+        check()
