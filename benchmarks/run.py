@@ -46,6 +46,7 @@ def main() -> None:
         ("gar_async", lambda: gar_async.main(steps=steps_async,
                                              **seeded)),
         ("serve_robust", lambda: serve_robust.main()),
+        ("serve_speculative", lambda: serve_robust.main_speculative()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),
         ("fig3", lambda: fig3_cifar_attack.main(steps=steps3)),
         ("fig45", lambda: fig45_bulyan_defense.main(steps=steps45)),

@@ -11,20 +11,36 @@ exactly as in ``gar_throughput.main_backends``).
 ``derived`` reports ``tok_s`` (aggregate tokens/second across slots) and
 ``agg_overhead`` — the step-time ratio against the same ensemble under
 plain ``average`` with the same backend column.
+
+The **speculative** rows (:func:`main_speculative`) benchmark the robust
+speculative pipeline against the per-token path: one iteration is a
+draft proposal (``k - 1`` single-replica decode steps in one jit'd
+scan), one batched robust verify over the ``(B, k)`` block, and the
+acceptance rule.  ``derived`` reports measured tokens/second, the mean
+accepted tokens per iteration, ``p99_us`` per-iteration latency over the
+sample loop, and ``speedup`` vs the same ensemble's per-token row — the
+tiny byte-sized bench model keeps the rows meaningful off-TPU (dispatch
+amortization and the batched verify dominate, exactly the effect the
+speculative path targets).
 """
 from __future__ import annotations
 
+import argparse
 import time
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit
 from repro.agg import AggSpec
-from repro.dist.serve_robust import (make_robust_serve_step, replicate_cache,
-                                     replicate_params)
+from repro.dist.serve_robust import (make_robust_serve_step,
+                                     make_robust_verify_step,
+                                     replicate_cache, replicate_params)
 from repro.models import init_cache, init_model
 from repro.models.config import ModelConfig
+from repro.serving.speculative import accept_block, make_draft_propose
 
 _SLOTS = 4
 _CACHE = 64
@@ -51,8 +67,19 @@ def _time_step(step, stacked, cache, token, pos, state, reps: int = 10
     return 1e6 * (time.time() - t0) / reps
 
 
+def _sample_iters(fn, reps: int) -> np.ndarray:
+    """Per-iteration wall times (us) of ``fn`` after one warmup call."""
+    jax.block_until_ready(fn())
+    times = np.empty((reps,), np.float64)
+    for i in range(reps):
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        times[i] = 1e6 * (time.time() - t0)
+    return times
+
+
 def main(ns=(7, 11), gars=("average", "krum", "bulyan-krum"),
-         backends=("xla", "pallas")) -> None:
+         backends=("xla", "pallas"), reps: int = 10) -> None:
     cfg = _bench_cfg()
     params = init_model(jax.random.PRNGKey(0), cfg)
     token = jnp.ones((_SLOTS, 1), jnp.int32)
@@ -67,7 +94,8 @@ def main(ns=(7, 11), gars=("average", "krum", "bulyan-krum"),
             for gar in gars:
                 spec = AggSpec(f=f, gar=gar, distance_backend=backend)
                 step = jax.jit(make_robust_serve_step(cfg, spec))
-                us = _time_step(step, stacked, cache, token, pos, None)
+                us = _time_step(step, stacked, cache, token, pos, None,
+                                reps=reps)
                 if gar == "average":
                     ref_us = us
                 tok_s = 1e6 * _SLOTS / us
@@ -77,5 +105,79 @@ def main(ns=(7, 11), gars=("average", "krum", "bulyan-krum"),
                      backend=backend)
 
 
+def main_speculative(ns=(7,), ks=(1, 2, 4), gars=("krum", "bulyan-krum"),
+                     reps: int = 30) -> None:
+    """Speculative-vs-per-token rows: tokens/sec, acceptance, p99.
+
+    The per-token baseline row (``spec_pertoken_*``) times the PR-4
+    robust serve step; each ``k`` row times a full speculative iteration
+    (draft scan + batched robust verify + acceptance) and converts the
+    *measured* accepted-token count into throughput, so a rejecting
+    draft shows up as lost speedup, not a wrong number.  The draft is
+    ensemble replica 0 of the jittered stack — the honest-draft regime.
+    """
+    cfg = _bench_cfg()
+    params = init_model(jax.random.PRNGKey(0), cfg)
+    token = jnp.ones((_SLOTS,), jnp.int32)
+    pos = jnp.full((_SLOTS,), 3, jnp.int32)
+    for n in ns:
+        f = (n - 3) // 4
+        stacked = replicate_params(params, n, jitter=1e-3,
+                                   key=jax.random.PRNGKey(1))
+        cache = replicate_cache(init_cache(cfg, _SLOTS, _CACHE), n)
+        draft_cache = init_cache(cfg, _SLOTS, _CACHE)
+        draft_params = jax.tree_util.tree_map(lambda x: x[0], stacked)
+        for gar in gars:
+            spec = AggSpec(f=f, gar=gar)
+            serve = jax.jit(make_robust_serve_step(cfg, spec))
+            times = _sample_iters(
+                lambda: serve(stacked, cache, token[:, None], pos, None)[0],
+                reps)
+            us_tok = float(np.mean(times))
+            base_tok_s = 1e6 * _SLOTS / us_tok
+            emit(f"serve_robust/spec_pertoken_{gar}_n{n}", us_tok,
+                 f"tok_s={base_tok_s:.0f};"
+                 f"p99_us={float(np.percentile(times, 99)):.0f}")
+            for k in ks:
+                propose = jax.jit(make_draft_propose(cfg, k))
+                verify = jax.jit(make_robust_verify_step(cfg, spec))
+                accept = jax.jit(accept_block)
+
+                def one_iter():
+                    block, _dc = propose(draft_params, draft_cache,
+                                         token, pos)
+                    agg, _c, _diag, _st = verify(stacked, cache, block,
+                                                 pos, None)
+                    return accept(block, agg)
+
+                times = _sample_iters(lambda: one_iter()[0], reps)
+                us = float(np.mean(times))
+                _, count, _ = one_iter()
+                mean_acc = float(np.mean(np.asarray(count)))
+                tok_s = 1e6 * _SLOTS * mean_acc / us
+                emit(f"serve_robust/spec_{gar}_n{n}_k{k}", us,
+                     f"tok_s={tok_s:.0f};accept={mean_acc:.2f};"
+                     f"speedup={tok_s / base_tok_s:.2f};"
+                     f"p99_us={float(np.percentile(times, 99)):.0f}")
+
+
+def run(argv: Optional[Sequence[str]] = None) -> None:
+    """CLI entry: per-token rows then speculative rows.
+
+    ``--quick`` shrinks the grid to one ensemble size, the xla backend,
+    ``k in (1, 4)`` and few reps — the CI smoke configuration.
+    """
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: n=7, xla only, k in (1, 4), few reps")
+    args = ap.parse_args(argv)
+    if args.quick:
+        main(ns=(7,), gars=("average", "krum"), backends=("xla",), reps=3)
+        main_speculative(ns=(7,), ks=(1, 4), gars=("krum",), reps=5)
+    else:
+        main()
+        main_speculative()
+
+
 if __name__ == "__main__":
-    main()
+    run()

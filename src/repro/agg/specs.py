@@ -48,6 +48,13 @@ class AggSpec:
         ``repro.training.trainer.make_async_byzantine_step``);
         ``async_tau=0`` makes the async step reproduce the synchronous
         one exactly.
+      speculative_k / draft_replica — robust speculative decoding
+        (serving only): ``speculative_k`` is the verify-block length
+        (``0``/``1`` = the per-token path), ``draft_replica`` the
+        ensemble row whose parameters drive the cheap draft model.  Only
+        the serving engine and ``repro.serving.speculative`` read them;
+        the acceptance rule always tests drafts against the *robustly
+        aggregated* verifier distribution, never a single replica.
     """
 
     f: int
@@ -62,6 +69,8 @@ class AggSpec:
     seed: int = 0
     async_tau: "int | tuple" = 0       # bounded staleness (scalar or per-worker)
     async_schedule: str = "fixed"      # fixed | random
+    speculative_k: int = 0             # verify-block length (0/1 = per-token)
+    draft_replica: int = 0             # ensemble row the draft model reads
 
     @property
     def n_honest(self) -> int:

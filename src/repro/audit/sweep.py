@@ -22,7 +22,13 @@ delay schedules, and asserts the shared contracts at each corner:
   on bf16 inputs (``repro.kernels.probes``, the fused megakernel
   included), and the sharded engine's bf16 tree path — under the
   ``xla`` *and* ``fused`` distance backends — agrees with the fp32
-  flat reference while preserving leaf dtypes.
+  flat reference while preserving leaf dtypes;
+* **speculative serving** — per-position aggregation of synthetic
+  ``(n, B, k, vocab)`` verifier-logit stacks satisfies each rule's
+  declared invariants (the convex-hull contract on verifier logits),
+  and the ``repro.serving.speculative.accept_block`` acceptance rule
+  only ever emits tokens in the aggregate's support — a colluding
+  draft yields exactly the aggregate's own argmax stream.
 
 Violations are collected (not raised), so one run reports every broken
 corner.  CLI: ``python -m repro.audit.sweep [--quick]`` exits non-zero
@@ -162,7 +168,10 @@ def audit_roster() -> List[str]:
       more representatives of each composite family (``bulyan-*``,
       ``buffered-*``, ``stale-*``, ``stale-exp-*``, ``fused-*`` and
       their nestings) — every name resolves through
-      ``repro.agg.resolve_rule``.
+      ``repro.agg.resolve_rule``.  The speculative serving section
+      audits the roster's serving-capable subset (stateless rules with
+      a tree path — what ``aggregate_logits`` can drive) as robust
+      verifiers of the speculative decode mode.
     """
     from repro.agg.fused import FUSED_BASES
     bases = rule_names()
@@ -441,6 +450,113 @@ def _fp32_section(cfg: SweepConfig, report: AuditReport) -> None:
             report.add("fp32", 1, violations)
 
 
+def _speculative_section(cfg: SweepConfig, report: AuditReport) -> None:
+    """Robust speculative serving: acceptance + aggregation contracts.
+
+    For every serving-capable roster rule (tree path required — the
+    serving aggregation runs through ``aggregate_logits``) and every
+    applicable attack, synthetic ``(n, B, k, vocab)`` verifier-logit
+    stacks are aggregated per position exactly like
+    ``make_robust_verify_step`` does, and two contracts are asserted:
+
+    * **verifier aggregation invariants** — each position's aggregate
+      satisfies the rule's declared invariants (convex-hull membership,
+      trimming, finiteness) against the stack it consumed — the
+      convex-hull contract on verifier logits;
+    * **acceptance rule** — every token :func:`accept_block` emits
+      carries an aggregated logit within ``margin`` of that position's
+      maximum (accepted token survives the aggregate's support — never a
+      single replica's), counts stay in ``[1, k]``, and a draft that
+      copies the aggregate argmax is accepted in full while a colluding
+      constant-token draft yields exactly the aggregate's own argmax
+      stream.
+    """
+    from repro.dist.serve_robust import aggregate_logits
+    from repro.serving.speculative import accept_block
+    key = jax.random.PRNGKey(cfg.seed + 4)
+    batch, k_block, vocab = 2, 4, cfg.d
+    f = cfg.fs[0]
+    roster = [name for name in audit_roster()
+              if resolve_rule(name).tree_fn is not None
+              and not resolve_rule(name).stateful]
+    attacks = [a for a in cfg.attacks if a not in _DELAY_ATTACKS]
+    for name in roster:
+        rule = resolve_rule(name)
+        n = max(rule.min_n(f), f + 2) + cfg.extra_n[-1]
+        for attack in attacks:
+            violations: List[str] = []
+            ck = _case_key(key, "speculative", name, attack, n, f)
+            honest = (jax.random.normal(
+                ck, (n - f, batch, k_block, vocab), jnp.float32) * 0.5)
+            if attack == "none" or f == 0:
+                byz = jax.random.normal(
+                    jax.random.fold_in(ck, 1),
+                    (f, batch, k_block, vocab), jnp.float32) * 0.5
+            else:
+                flat = get_attack(attack)(
+                    honest.reshape(n - f, -1), f,
+                    jax.random.fold_in(ck, 2),
+                    **_ATTACK_KW.get(attack, {}))
+                byz = flat.reshape(f, batch, k_block, vocab)
+            stack = jnp.concatenate([honest, byz])   # (n, B, k, V)
+            aggs = []
+            for j in range(k_block):
+                agg, diag = aggregate_logits(stack[:, :, j, :], f, name)
+                aggs.append(agg)
+                label = f"speculative/{name}/{attack}/pos{j}"
+                violations += check_rule_output(
+                    rule, jnp.reshape(agg, (-1,)), diag.selected,
+                    np.asarray(stack[:, :, j, :], np.float32
+                               ).reshape(n, -1), f, label)
+            agg_logits = jnp.stack(aggs, axis=1)     # (B, k, V)
+            v = np.asarray(jnp.argmax(agg_logits, axis=-1))
+            t0 = jnp.zeros((batch,), jnp.int32)
+            # a draft that copies the aggregate argmax must be accepted
+            # in full; a colluding constant-token draft must yield the
+            # aggregate's own argmax stream (collusion costs throughput,
+            # never correctness)
+            blocks = {
+                "clean": jnp.concatenate(
+                    [t0[:, None], jnp.asarray(v[:, :k_block - 1])], axis=1),
+                "colluding": jnp.concatenate(
+                    [t0[:, None],
+                     jnp.full((batch, k_block - 1), 3, jnp.int32)], axis=1),
+            }
+            anp = np.asarray(agg_logits, np.float32)
+            for kind, block in blocks.items():
+                emitted, count, _ = accept_block(block, agg_logits)
+                emitted, count = np.asarray(emitted), np.asarray(count)
+                label = f"speculative/{name}/{attack}/{kind}"
+                if ((count < 1) | (count > k_block)).any():
+                    violations.append(
+                        f"{label}: emission count {count.tolist()} "
+                        f"outside [1, {k_block}]")
+                for b in range(batch):
+                    for j in range(int(count[b])):
+                        gap = float(anp[b, j].max()
+                                    - anp[b, j, emitted[b, j]])
+                        if gap > 1e-5:
+                            violations.append(
+                                f"{label}: emitted token at slot {b} "
+                                f"pos {j} trails the aggregate max by "
+                                f"{gap:.3g} — not in the aggregate's "
+                                f"support")
+                if kind == "clean" and (count != k_block).any():
+                    violations.append(
+                        f"{label}: argmax-copying draft not fully "
+                        f"accepted (counts {count.tolist()})")
+                if kind == "colluding":
+                    for b in range(batch):
+                        got = emitted[b, :count[b]].tolist()
+                        want = v[b, :count[b]].tolist()
+                        if got != want:
+                            violations.append(
+                                f"{label}: colluding draft changed the "
+                                f"accepted stream {got} vs aggregate "
+                                f"argmax {want}")
+            report.add("speculative", k_block + 2, violations)
+
+
 def run_sweep(cfg: Optional[SweepConfig] = None) -> AuditReport:
     """Run every section of the corner sweep.
 
@@ -459,6 +575,7 @@ def run_sweep(cfg: Optional[SweepConfig] = None) -> AuditReport:
     _staleness_section(cfg, report)
     _fp32_section(cfg, report)
     _invariant_section(cfg, report)
+    _speculative_section(cfg, report)
     return report
 
 

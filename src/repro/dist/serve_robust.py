@@ -46,13 +46,13 @@ import jax.numpy as jnp
 from repro.agg.specs import AggSpec
 from repro.agg.state import AggState, init_state
 from repro.dist.robust import distributed_aggregate, inject_byzantine
-from repro.models import decode_step, prefill
+from repro.models import decode_step, prefill, verify_step
 from repro.models.config import ModelConfig
 
 __all__ = ["aggregate_logits", "init_ensemble_state",
            "make_robust_prefill_step", "make_robust_serve_step",
-           "poison_replicas", "replicate_cache", "replicate_params",
-           "stack_replicas"]
+           "make_robust_verify_step", "poison_replicas", "replicate_cache",
+           "replicate_params", "reset_slot_state", "stack_replicas"]
 
 
 # ---------------------------------------------------------------------------
@@ -242,6 +242,38 @@ def init_ensemble_state(spec: AggSpec, n_replicas: int, batch: int,
     return init_state(rule, template, flat=False)
 
 
+def reset_slot_state(state: Optional[AggState],
+                     slot: int) -> Optional[AggState]:
+    """Clear one batch slot's column of a serving ``AggState``.
+
+    The serving engine's stateful-rule state is laid out per the
+    :func:`init_ensemble_state` template — ``history`` leaves are
+    ``(W, n_replicas, batch, vocab)`` and ``center`` leaves
+    ``(batch, vocab)`` — so a request admitted into a *reused* slot
+    would otherwise inherit the sliding-window / momentum history of the
+    slot's previous occupant and decode a polluted stream.  The engine
+    calls this at admission to zero exactly the admitted slot's column;
+    other slots' carried state (and the global ``step`` counter) are
+    untouched.
+
+    Args:
+      state: the engine's carried ``AggState`` (``None`` for stateless
+        rules — returned unchanged).
+      slot: batch-slot index being (re)admitted.
+
+    Returns:
+      The state with ``history[:, :, slot]`` / ``center[slot]`` zeroed,
+      or ``None`` when ``state`` is ``None``.
+    """
+    if state is None:
+        return None
+    history = tuple(h.at[:, :, slot].set(0.0) for h in state.history) \
+        if state.history != () else ()
+    center = tuple(c.at[slot].set(0.0) for c in state.center) \
+        if state.center != () else ()
+    return state._replace(history=history, center=center)
+
+
 # ---------------------------------------------------------------------------
 # jit-able ensemble steps
 # ---------------------------------------------------------------------------
@@ -354,3 +386,73 @@ def make_robust_serve_step(cfg: ModelConfig, spec: AggSpec,
         return out[0], new_cache, out[1], new_state
 
     return serve_step
+
+
+def make_robust_verify_step(cfg: ModelConfig, spec: AggSpec,
+                            mesh=None) -> Callable:
+    """Build the jit-able batched speculative-verify step.
+
+    The returned ``verify(stacked_params, stacked_cache, tokens, pos,
+    agg_state) -> (agg_logits, new_cache, diag, new_agg_state)`` runs the
+    ensemble over a whole ``(B, k)`` draft block in **one** model pass
+    per replica (``repro.models.verify_step`` — keys written first,
+    per-query causal masking), optionally applies ``spec.attack`` to the
+    stacked logits in-graph, and aggregates the resulting
+    ``(n, B, k, vocab)`` stack through the unchanged ``repro.agg``
+    registry.
+
+    Aggregation is **per position, in stream order**: a ``lax.scan``
+    over the block's ``k`` positions applies ``aggregate_logits`` to
+    each ``(n, B, vocab)`` slice, threading the carried ``AggState``
+    from position to position — so every registered tree rule keeps the
+    exact per-token semantics (and state evolution) of the PR-4 decode
+    path, and a ``k = 1`` block *is* that path.  The whole scan lives in
+    a single jit'd computation, so the per-token dispatch cost of the
+    per-token path is paid once per block.
+
+    Args:
+      cfg: model configuration of every replica (must satisfy
+        ``repro.models.verify_supported`` — ring/SSM caches cannot roll
+        back rejected draft tokens).
+      spec: serving ``AggSpec`` (``gar``, declared ``f``, ``agg_dtype``,
+        ``distance_backend``, ``history_window``; ``spec.attack``
+        poisons the last ``spec.f`` replicas' logits in-graph, at every
+        block position).
+      mesh: optional device mesh for the Pallas distance path.
+
+    Returns:
+      The ``verify`` closure described above.  ``agg_logits`` is
+      ``(B, k, vocab)`` with the replica axis aggregated away; ``diag``
+      is a per-position ``DistAggResult`` (leaves lead with a ``(k,)``
+      axis).
+    """
+    from repro.models import verify_supported
+    ok, reason = verify_supported(cfg)
+    if not ok:
+        raise ValueError(
+            f"speculative verify unsupported for {cfg.name!r} — {reason}")
+    stateful = spec.rule().stateful
+
+    def _agg_one(state, slice_nbv):
+        out = aggregate_logits(
+            slice_nbv, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            distance_backend=spec.distance_backend, mesh=mesh,
+            state=state if stateful else None,
+            history_window=spec.history_window)
+        new_state = out[2] if stateful else state
+        return new_state, (out[0], out[1])
+
+    def verify(stacked_params, stacked_cache, tokens: jnp.ndarray, pos,
+               agg_state: Optional[AggState] = None):
+        logits, new_cache = jax.vmap(
+            lambda p, c: verify_step(p, cfg, c, tokens, pos)
+        )(stacked_params, stacked_cache)
+        stack = logits.astype(jnp.float32)        # (n, B, k, V)
+        stack = _maybe_attack_logits(stack, spec, pos)
+        xs = jnp.moveaxis(stack, 2, 0)            # (k, n, B, V) stream order
+        agg_state, (aggs, diag) = jax.lax.scan(_agg_one, agg_state, xs)
+        agg_logits = jnp.moveaxis(aggs, 0, 1)     # (B, k, V)
+        return agg_logits, new_cache, diag, (agg_state if stateful
+                                             else None)
+
+    return verify

@@ -130,7 +130,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             attn_shard: Optional[str] = None,
             logits_dtype: Optional[str] = None,
             serve_gar: Optional[str] = None, serve_f: int = 2,
-            serve_replicas: int = 0,
+            serve_replicas: int = 0, serve_speculative_k: int = 0,
             out_path: Optional[str] = None) -> Dict[str, Any]:
     import jax
     import jax.numpy as jnp
@@ -142,7 +142,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     from repro.dist.mesh import make_production_mesh
     from repro.dist.serve import make_prefill_step, make_serve_step
     from repro.dist.serve_robust import (init_ensemble_state,
-                                         make_robust_serve_step)
+                                         make_robust_serve_step,
+                                         make_robust_verify_step)
     from repro.dist.train import (DistByzantineSpec, init_agg_state,
                                   make_train_step)
     from repro.launch import specs as S
@@ -249,23 +250,39 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             n_rep = serve_replicas or quorum(serve_gar, serve_f)
             sspec = DistByzantineSpec(f=serve_f, gar=serve_gar,
                                       agg_dtype=agg_dtype,
-                                      distance_backend=distance_backend)
+                                      distance_backend=distance_backend,
+                                      speculative_k=serve_speculative_k)
             record.update(serve_gar=serve_gar, serve_f=serve_f,
-                          serve_replicas=n_rep)
+                          serve_replicas=n_rep,
+                          serve_speculative_k=serve_speculative_k)
             eparams, _ = S.ensemble_param_specs(cfg, mesh, n_rep)
             cache, cache_sh = S.ensemble_cache_specs(
                 cfg, n_rep, shape.global_batch, shape.seq_len, mesh)
-            step = make_robust_serve_step(cfg, sspec, mesh=mesh)
             agg_state = None
             if sspec.rule().stateful:
                 agg_state = jax.eval_shape(
                     lambda: init_ensemble_state(sspec, n_rep,
                                                 shape.global_batch,
                                                 cfg.vocab_size))
-            jitted = jax.jit(step, donate_argnums=(1,),
-                             out_shardings=(None, cache_sh, None, None))
-            lowered = jitted.lower(eparams, cache, inputs["token"],
-                                   inputs["pos"], agg_state)
+            if serve_speculative_k >= 1:
+                # speculative verify: the whole (B, k) draft block through
+                # one batched robust-aggregation step, per-slot positions
+                from jax.sharding import PartitionSpec as P
+                b = shape.global_batch
+                block = S.sds((b, serve_speculative_k), jnp.int32, mesh,
+                              inputs["token"].sharding.spec)
+                posv = S.sds((b,), jnp.int32, mesh, P())
+                step = make_robust_verify_step(cfg, sspec, mesh=mesh)
+                jitted = jax.jit(step, donate_argnums=(1,),
+                                 out_shardings=(None, cache_sh, None, None))
+                lowered = jitted.lower(eparams, cache, block, posv,
+                                       agg_state)
+            else:
+                step = make_robust_serve_step(cfg, sspec, mesh=mesh)
+                jitted = jax.jit(step, donate_argnums=(1,),
+                                 out_shardings=(None, cache_sh, None, None))
+                lowered = jitted.lower(eparams, cache, inputs["token"],
+                                       inputs["pos"], agg_state)
         else:  # decode
             cache, cache_sh = S.cache_specs(cfg, shape.global_batch,
                                             shape.seq_len, mesh)
@@ -375,6 +392,10 @@ def main() -> None:
                          "only; see repro.dist.serve_robust)")
     ap.add_argument("--serve-f", type=int, default=2,
                     help="Byzantine replica bound of --serve-gar")
+    ap.add_argument("--serve-speculative-k", type=int, default=0,
+                    help="lower the robust speculative verify step for "
+                         "(B, k) draft blocks instead of the per-token "
+                         "serve step (decode shapes with --serve-gar)")
     ap.add_argument("--serve-replicas", type=int, default=0,
                     help="ensemble size (0 = the rule's minimal quorum "
                          "for --serve-f)")
@@ -403,7 +424,9 @@ def main() -> None:
                   unroll=args.unroll, attn_shard=args.attn_shard,
                   logits_dtype=args.logits_dtype,
                   serve_gar=args.serve_gar, serve_f=args.serve_f,
-                  serve_replicas=args.serve_replicas, out_path=args.out)
+                  serve_replicas=args.serve_replicas,
+                  serve_speculative_k=args.serve_speculative_k,
+                  out_path=args.out)
     print(json.dumps(rec, indent=1))
 
 

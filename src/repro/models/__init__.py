@@ -1,7 +1,9 @@
 """Model stack: configs, transformer assembly, serving path, simple models."""
 from repro.models.config import INPUT_SHAPES, InputShape, ModelConfig
 from repro.models.transformer import forward, init_model
-from repro.models.decode import decode_step, init_cache, prefill
+from repro.models.decode import (decode_step, init_cache, prefill,
+                                 verify_step, verify_supported)
 
 __all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "decode_step",
-           "forward", "init_cache", "init_model", "prefill"]
+           "forward", "init_cache", "init_model", "prefill",
+           "verify_step", "verify_supported"]

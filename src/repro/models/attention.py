@@ -189,3 +189,35 @@ def decode_attention(q1: jnp.ndarray, k_cache: jnp.ndarray,
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v_cache.dtype), v_cache)
     return out.reshape(b, 1, hq, d)
+
+
+# -- verify (a block of new tokens against a cache, causal) ---------------------
+
+def verify_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray,
+                     q_valid: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Multi-query decode attention for speculative verify blocks.
+
+    ``q``: (B, Sq, Hq, D) — a block of ``Sq`` new-token queries; caches:
+    (B, L, Hkv, D).  Each query ``j`` attends to the first
+    ``q_valid[:, j]`` cache entries (per-query causal prefix — the block's
+    own keys must already be written into the cache).  ``q_valid=None``
+    attends to the whole cache (the cross-attention case).
+
+    At ``Sq = 1`` with ``q_valid = valid_len[:, None]`` this computes
+    exactly what :func:`decode_attention` computes — the single-token
+    decode step is the degenerate verify block.
+    """
+    b, sq, hq, d = q.shape
+    s, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k_cache,
+                        preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(d).astype(jnp.float32)
+    if q_valid is not None:
+        mask = jnp.arange(s)[None, None, :] < q_valid[:, :, None]  # (B,Sq,S)
+        scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(b, sq, hq, d)

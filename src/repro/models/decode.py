@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import layers, moe, ssm
-from repro.models.attention import decode_attention, rope
+from repro.models.attention import decode_attention, rope, verify_attention
 from repro.models.config import ModelConfig
 from repro.models.layers import _dtype
 
@@ -151,6 +151,163 @@ def decode_step(params, cfg: ModelConfig, cache: dict, token: jnp.ndarray,
     for t in range(cfg.n_tail):
         slot = cfg.slot(cfg.n_periods * cfg.period + t)
         new_tail[f"t{t}"], x = _decode_layer(
+            params["tail"][f"t{t}"], cache["tail"][f"t{t}"], x, cfg, slot,
+            pos)
+
+    x = layers.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["lm_head"], x)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits, {"periods": new_periods, "tail": new_tail}
+
+
+# ---------------------------------------------------------------------------
+# verify step (a causal block of new tokens — the speculative-decoding path)
+# ---------------------------------------------------------------------------
+
+_RING_SLOTS = ("swa", "chunked")
+
+
+def verify_supported(cfg: ModelConfig) -> Tuple[bool, str]:
+    """Whether ``verify_step`` (and hence speculative decoding) applies.
+
+    The multi-token verify block relies on positional cache rollback: a
+    rejected draft suffix leaves garbage cache entries *above* the
+    accepted position, which per-query causal masking hides until the
+    next block overwrites them.  Two cache families break that invariant:
+
+    * ring caches (``swa`` / ``chunked`` slots) wrap rejected writes onto
+      *valid* old window entries, which stay visible;
+    * recurrent SSM state (``mamba``) advances destructively — there is
+      no positional index to roll back to.
+
+    Args:
+      cfg: model configuration to probe.
+
+    Returns:
+      ``(ok, reason)`` — ``reason`` names the offending layer slot when
+      ``ok`` is False (empty string otherwise).
+    """
+    slots = set(cfg.layer_pattern)
+    slots.update(cfg.slot(cfg.n_periods * cfg.period + t)
+                 for t in range(cfg.n_tail))
+    for slot in sorted(slots):
+        if slot == "mamba":
+            return False, ("mamba: recurrent SSM state cannot roll back "
+                           "a rejected draft suffix")
+        if slot in _RING_SLOTS:
+            return False, (f"{slot}: ring cache wraps rejected draft "
+                           f"writes onto valid window entries")
+    return True, ""
+
+
+def _verify_attn_slot(p, c, x, cfg: ModelConfig, slot: str, pos
+                      ) -> Tuple[dict, jnp.ndarray]:
+    """One attention layer over a ``(B, S)`` verify block: token ``j``
+    sits at position ``pos + j``.  All S keys are written first, then
+    every query attends its own causal prefix (``verify_attention``) —
+    so entry ``j``'s output equals the sequential decode that fed the
+    same ``j`` tokens, and garbage above the block (rejected drafts of
+    earlier rounds) stays masked."""
+    b, s, d = x.shape
+    hd = cfg.head_dim
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    qpos = pos[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]  # (B, S)
+    h = layers.rmsnorm(p["ln"], x)
+    q = (h @ p["attn"]["wq"] + p["attn"].get("bq", 0.0)
+         ).reshape(b, s, cfg.n_heads, hd)
+    k = (h @ p["attn"]["wk"] + p["attn"].get("bk", 0.0)
+         ).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (h @ p["attn"]["wv"] + p["attn"].get("bv", 0.0)
+         ).reshape(b, s, cfg.n_kv_heads, hd)
+    if slot != "attn_nope":
+        q = rope(q, qpos, cfg.rope_theta)
+        k = rope(k, qpos, cfg.rope_theta)
+    L = c["k"].shape[1]
+    if slot in _RING_SLOTS or slot == "mamba":
+        raise ValueError(
+            f"verify_step does not support {slot!r} slots (ring/SSM "
+            f"caches cannot roll back rejected draft tokens)")
+    idx = jnp.minimum(qpos, L - 1)  # (B, S)
+    bidx = jnp.arange(b)[:, None]
+    kc = c["k"].at[bidx, idx].set(k.astype(c["k"].dtype))
+    vc = c["v"].at[bidx, idx].set(v.astype(c["v"].dtype))
+    q_valid = jnp.minimum(qpos + 1, L)  # per-query causal prefix
+    o = verify_attention(q, kc, vc, q_valid=q_valid)
+    y = o.reshape(b, s, cfg.n_heads * hd) @ p["attn"]["wo"]
+    newc = dict(c)
+    newc["k"], newc["v"] = kc, vc
+    return newc, y
+
+
+def _verify_layer(p, c, x, cfg: ModelConfig, slot: str, pos
+                  ) -> Tuple[dict, jnp.ndarray]:
+    newc, y = _verify_attn_slot(p, c, x, cfg, slot, pos)
+    x = x + y
+    if slot == "xattn":
+        b, s = x.shape[0], x.shape[1]
+        hd = cfg.head_dim
+        h = layers.rmsnorm(p["ln_x"], x)
+        q = (h @ p["xatt"]["wq"] + p["xatt"].get("bq", 0.0)
+             ).reshape(b, s, cfg.n_heads, hd)
+        o = verify_attention(q, c["xk"], c["xv"])
+        x = x + o.reshape(b, s, cfg.n_heads * hd) @ p["xatt"]["wo"]
+    if "ffn" in p:
+        x = x + layers.ffn(p["ffn"], layers.rmsnorm(p["ln_f"], x),
+                           cfg.ffn_act)
+    elif "moe" in p:
+        y, _ = moe.moe_ffn(p["moe"], layers.rmsnorm(p["ln_f"], x),
+                           top_k=cfg.moe_top_k, act=cfg.ffn_act,
+                           capacity_factor=cfg.capacity_factor,
+                           impl=cfg.moe_impl)
+        x = x + y
+    return newc, x
+
+
+def verify_step(params, cfg: ModelConfig, cache: dict, tokens: jnp.ndarray,
+                pos) -> Tuple[jnp.ndarray, dict]:
+    """Decode a causal block of ``S`` tokens in one forward pass.
+
+    The speculative-verify analogue of ``decode_step``: ``tokens[:, j]``
+    is consumed at position ``pos + j`` and ``logits[:, j]`` predicts the
+    token at position ``pos + j + 1`` — exactly what ``S`` sequential
+    ``decode_step`` calls on the same tokens would produce, but with one
+    model pass (keys written first, per-query causal masking).  Requires
+    full attention caches (``verify_supported``).
+
+    Args:
+      params: parameter pytree of one model.
+      cfg: model configuration.
+      cache: decode-cache pytree (``init_cache`` layout).
+      tokens: ``(B, S)`` int32 token block.
+      pos: scalar or ``(B,)`` int32 — per-slot position of ``tokens[:, 0]``.
+
+    Returns:
+      ``(logits (B, S, V), new_cache)`` — the cache gains the block's
+      ``S`` key/value entries per attention layer.
+    """
+    x = layers.embed(params["embed"], tokens)
+
+    def body(x, xs):
+        period_p, period_c = xs
+        newc = {}
+        for j, slot in enumerate(cfg.layer_pattern):
+            newc[f"s{j}"], x = _verify_layer(period_p[f"s{j}"],
+                                             period_c[f"s{j}"], x, cfg,
+                                             slot, pos)
+        return x, newc
+
+    x, new_periods = jax.lax.scan(
+        body, x, (params["periods"], cache["periods"]),
+        unroll=cfg.unroll_scan)
+
+    new_tail = {}
+    for t in range(cfg.n_tail):
+        slot = cfg.slot(cfg.n_periods * cfg.period + t)
+        new_tail[f"t{t}"], x = _verify_layer(
             params["tail"][f"t{t}"], cache["tail"][f"t{t}"], x, cfg, slot,
             pos)
 

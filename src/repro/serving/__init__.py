@@ -1,11 +1,17 @@
-"""Single-host serving: the continuous-batching engine.
+"""Single-host serving: the continuous-batching engine + speculation.
 
 ``ServingEngine`` drives the model zoo's prefill/decode path with
 fixed-slot continuous batching; its ``ensemble=`` mode turns it into the
 Byzantine-resilient ensemble server built on ``repro.dist.serve_robust``
 (robust logits aggregation per decode step through the ``repro.agg``
-registry).  Architecture notes live in docs/serving.md.
+registry), and ``ensemble.speculative_k`` switches that server to robust
+speculative decoding (``repro.serving.speculative``: a draft replica
+proposes, the aggregate verifies).  Architecture notes live in
+docs/serving.md.
 """
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.speculative import (accept_block, draft_cache_view,
+                                       make_draft_propose)
 
-__all__ = ["Request", "ServingEngine"]
+__all__ = ["Request", "ServingEngine", "accept_block", "draft_cache_view",
+           "make_draft_propose"]

@@ -8,9 +8,12 @@ requests are admitted into free slots via per-slot prefill.  This is the
 exercises caches/positions exactly as the decode dry-run shapes do.
 
 Each slot carries its own position counter (mixed-length batching ropes
-and cache-writes per slot).  Simplifications vs a production scheduler: no
-paged KV; prefill runs at admission time on the slot's sub-batch; greedy
-sampling.
+and cache-writes per slot).  Admission is continuous: requests queue via
+:meth:`ServingEngine.submit` and every :meth:`ServingEngine.step` drains
+the queue into freed slots *before* decoding, so a slot vacated by a
+finished request is refilled mid-stream without the caller orchestrating
+anything.  Simplifications vs a production scheduler: no paged KV;
+prefill runs at admission time on the slot's sub-batch; greedy sampling.
 
 **Ensemble mode** (``ensemble=AggSpec(...)``): ``params`` is a
 replica-stacked pytree (leading ``(n_replicas,)`` axis on every leaf, see
@@ -20,6 +23,15 @@ through the ``repro.agg`` registry before sampling — Krum/Bulyan reject a
 poisoned replica's distribution; stateful rules thread an ``AggState``
 across tokens via ``self.agg_state``.  See docs/serving.md for the
 architecture and the AggState-across-tokens contract.
+
+**Speculative mode** (``ensemble.speculative_k >= 1``): each step drafts
+a ``k``-token block on replica ``ensemble.draft_replica``, verifies all
+``k`` positions in one batched robust-aggregation step
+(``make_robust_verify_step``), and emits the longest draft prefix that
+survives the aggregate plus one corrected token
+(``repro.serving.speculative.accept_block``) — 1..k tokens per step per
+slot.  ``speculative_k = 1`` runs the same machinery with no draft at
+all and reproduces the per-token stream bitwise.
 """
 from __future__ import annotations
 
@@ -76,9 +88,11 @@ class ServingEngine:
         self.ensemble = ensemble
         self.positions = np.zeros((n_slots,), np.int32)
         self.active: List[Optional[Request]] = [None] * n_slots
+        self.pending: List[Request] = []
         self.last_token = np.zeros((n_slots,), np.int32)
         self.sampler = sampler
         self.agg_state = None
+        self.spec_k = 0
         if ensemble is None:
             self.params = params
             self.cache = init_cache(cfg, n_slots, cache_len)
@@ -103,6 +117,25 @@ class ServingEngine:
             make_robust_serve_step(cfg, ensemble, mesh=mesh))
         self._ens_prefill = make_robust_prefill_step(
             cfg, ensemble, cache_len=cache_len, mesh=mesh)
+        # -- speculative mode -------------------------------------------------
+        k = int(getattr(ensemble, "speculative_k", 0) or 0)
+        if k < 1:
+            return
+        from repro.dist.serve_robust import make_robust_verify_step
+        from repro.serving.speculative import accept_block, make_draft_propose
+        self.spec_k = k
+        self.draft_replica = int(ensemble.draft_replica)
+        if not 0 <= self.draft_replica < self.n_replicas:
+            raise ValueError(
+                f"draft_replica {self.draft_replica} out of range for "
+                f"{self.n_replicas} replicas")
+        self.draft_params = jax.tree_util.tree_map(
+            lambda x: x[self.draft_replica], params)
+        self.draft_cache = init_cache(cfg, n_slots, cache_len)
+        self._propose = jax.jit(make_draft_propose(cfg, k))
+        self._verify = jax.jit(make_robust_verify_step(cfg, ensemble,
+                                                       mesh=mesh))
+        self._accept = jax.jit(accept_block)
 
     # -- admission -----------------------------------------------------------
 
@@ -112,25 +145,30 @@ class ServingEngine:
                 return i
         return None
 
-    def _splice_cache(self, slot: int, slot_cache) -> None:
-        """Write one slot's freshly prefilled cache into the batched cache.
+    @staticmethod
+    def _spliced(cache, slot: int, slot_cache, replicated: bool):
+        """One slot's freshly prefilled cache written into a batched cache.
 
         Period caches are stacked ``(n_periods, B, ...)``, tail caches
-        ``(B, ...)``; in ensemble mode both carry an extra leading
+        ``(B, ...)``; with ``replicated`` both carry an extra leading
         replica axis.
         """
-        if self.ensemble is None:
+        if not replicated:
             per, tail = (lambda fl, on: fl.at[:, slot].set(on[:, 0]),
                          lambda fl, on: fl.at[slot].set(on[0]))
         else:
             per, tail = (lambda fl, on: fl.at[:, :, slot].set(on[:, :, 0]),
                          lambda fl, on: fl.at[:, slot].set(on[:, 0]))
-        self.cache = {
+        return {
             "periods": jax.tree_util.tree_map(
-                per, self.cache["periods"], slot_cache["periods"]),
+                per, cache["periods"], slot_cache["periods"]),
             "tail": jax.tree_util.tree_map(
-                tail, self.cache["tail"], slot_cache["tail"]),
+                tail, cache["tail"], slot_cache["tail"]),
         }
+
+    def _splice_cache(self, slot: int, slot_cache) -> None:
+        self.cache = self._spliced(self.cache, slot, slot_cache,
+                                   self.ensemble is not None)
 
     def admit(self, req: Request) -> bool:
         """Admit one request into a free slot (returns False when full).
@@ -154,22 +192,53 @@ class ServingEngine:
             agg_logits, slot_cache, _ = self._ens_prefill(self.params, tokens)
             first = int(jnp.argmax(agg_logits[0]))
         self._splice_cache(slot, slot_cache)
+        if self.ensemble is not None:
+            # a reused slot must not inherit the previous occupant's
+            # sliding-window / momentum aggregation history
+            from repro.dist.serve_robust import reset_slot_state
+            self.agg_state = reset_slot_state(self.agg_state, slot)
+        if self.spec_k:
+            from repro.serving.speculative import draft_cache_view
+            self.draft_cache = self._spliced(
+                self.draft_cache, slot,
+                draft_cache_view(slot_cache, self.draft_replica),
+                replicated=False)
         self.active[slot] = req
         self.positions[slot] = len(req.prompt)
         self.last_token[slot] = first
         req.generated.append(first)
         return True
 
+    def submit(self, req: Request) -> None:
+        """Queue a request for admission at the next :meth:`step`.
+
+        The engine owns the scheduling: queued requests enter freed slots
+        mid-stream (continuous batching) without the caller tracking slot
+        occupancy.
+        """
+        self.pending.append(req)
+
+    def _admit_pending(self) -> None:
+        while self.pending and self._free_slot() is not None:
+            self.admit(self.pending.pop(0))
+
     # -- one decode step across all slots -------------------------------------
 
     def step(self) -> None:
-        """Decode one token for every active slot (no-op when idle).
+        """Admit queued requests into free slots, then decode the batch.
 
-        Ensemble mode additionally threads ``self.agg_state`` through the
-        robust step so stateful rules accumulate their history across
-        tokens.
+        Per-token mode decodes one token for every active slot; ensemble
+        mode additionally threads ``self.agg_state`` through the robust
+        step so stateful rules accumulate their history across tokens;
+        speculative mode emits 1..k tokens per slot (draft + batched
+        robust verify + acceptance).  A no-op when nothing is active or
+        queued.
         """
+        self._admit_pending()
         if not any(r is not None for r in self.active):
+            return
+        if self.spec_k:
+            self._step_speculative()
             return
         tokens = jnp.asarray(self.last_token)[:, None]
         # per-slot positions: each sequence ropes/writes at its own index
@@ -192,20 +261,50 @@ class ServingEngine:
                 req.done = True
                 self.active[i] = None
 
+    def _step_speculative(self) -> None:
+        """One speculative engine step: draft k-1, verify k, emit 1..k.
+
+        The draft replica proposes a block per slot; one jit'd verify
+        pass scores every position on every replica and aggregates
+        robustly; :func:`repro.serving.speculative.accept_block` turns
+        the aggregate into per-slot emissions.  Slots accept different
+        prefix lengths, so per-slot position counters diverge — exactly
+        what the ``pos``-vector decode contract supports.
+        """
+        tokens = jnp.asarray(self.last_token)
+        pos = jnp.asarray(self.positions, jnp.int32)
+        block, self.draft_cache = self._propose(
+            self.draft_params, self.draft_cache, tokens, pos)
+        agg_logits, self.cache, _diag, self.agg_state = self._verify(
+            self.params, self.cache, block, pos, self.agg_state)
+        emitted, count, _v = self._accept(block, agg_logits)
+        emitted = np.asarray(emitted, np.int32)
+        count = np.asarray(count, np.int32)
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            c = min(int(count[i]), req.max_new_tokens - len(req.generated))
+            req.generated.extend(int(t) for t in emitted[i, :c])
+            self.positions[i] += c
+            self.last_token[i] = int(emitted[i, c - 1])
+            if len(req.generated) >= req.max_new_tokens:
+                req.done = True
+                self.active[i] = None
+
     def run(self, requests: List[Request], max_steps: int = 1000
             ) -> Dict[int, List[int]]:
         """Serve a list of requests to completion (continuous batching).
 
-        Admits pending requests whenever slots free up, steps the batch
-        until everything is done or ``max_steps`` is hit, and returns
+        Queues everything via :meth:`submit`, steps the batch (each step
+        drains the queue into freed slots before decoding) until
+        everything is done or ``max_steps`` is hit, and returns
         ``{rid: generated tokens}``.
         """
-        pending = list(requests)
+        for req in requests:
+            self.submit(req)
         results: Dict[int, List[int]] = {}
         for _ in range(max_steps):
-            while pending and self._free_slot() is not None:
-                self.admit(pending.pop(0))
-            if not pending and not any(self.active):
+            if not self.pending and not any(self.active):
                 break
             self.step()
             for req in requests:

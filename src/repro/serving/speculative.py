@@ -1,0 +1,165 @@
+"""Robust speculative decoding: draft proposal + Byzantine-safe acceptance.
+
+Speculative decoding splits serving into a cheap **draft** pass and a
+batched **verify** pass.  Here the draft is a *single replica* of the
+ensemble (``spec.draft_replica``) decoding ``k - 1`` tokens greedily and
+autoregressively; the ensemble then scores the whole block in one
+``repro.dist.serve_robust.make_robust_verify_step`` call — ``n`` replica
+forwards over ``(B, k)`` tokens, aggregated per position through the
+unchanged ``repro.agg`` registry.
+
+The Byzantine contract is carried entirely by the **acceptance rule**
+(:func:`accept_block`): a draft token is emitted only if it survives the
+*robustly aggregated* verifier distribution — argmax (or a logit-margin
+threshold) on the aggregate, never on any single replica.  Consequences:
+
+* a poisoned draft can only *propose* bad tokens; every proposal is
+  checked against the aggregate, so collusion with the drafting replica
+  costs throughput (rejected blocks) but never changes the accepted
+  stream;
+* ``f`` poisoned *verifier* replicas are exactly the per-token serving
+  threat model — the aggregation rule bounds their influence on the
+  verdict the same way it bounds it on the per-token path.
+
+**Block convention** — a verify block of length ``k`` is
+``[t0, d1, ..., d_{k-1}]``: the last emitted token followed by the
+draft's proposals.  Fed at positions ``p .. p+k-1``, the aggregated
+logits ``A_0 .. A_{k-1}`` predict tokens at ``p+1 .. p+k``; proposal
+``d_{j+1}`` is accepted iff it survives ``A_j``, and the first rejected
+position is replaced by the aggregate's own argmax.  Every block
+therefore emits between 1 and ``k`` tokens, and at ``k = 1`` the block
+is just ``[t0]`` — no drafting at all, one aggregation over
+``(n, B, 1, vocab)`` — which makes the ``k = 1`` stream *bitwise
+identical* to the per-token path by construction.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step
+from repro.models.config import ModelConfig
+
+__all__ = ["accept_block", "draft_cache_view", "make_draft_propose"]
+
+
+def make_draft_propose(cfg: ModelConfig, k: int) -> Callable:
+    """Build the jit-able greedy draft proposer for block length ``k``.
+
+    The returned ``propose(draft_params, draft_cache, token, pos) ->
+    (block, new_draft_cache)`` rolls the single draft replica forward
+    ``k - 1`` greedy steps from the last emitted ``token`` — a
+    ``lax.scan`` of ``decode_step`` — and returns the verify block
+    ``[t0, d1, ..., d_{k-1}]`` of shape ``(B, k)``.  At ``k = 1`` no
+    draft model runs at all: the block is just ``token[:, None]`` and
+    the cache passes through untouched (the draft replica cannot touch a
+    ``k = 1`` stream even in principle).
+
+    The draft cache stays consistent across blocks without rollback:
+    entries the draft wrote for later-rejected proposals sit strictly
+    above the slot's accepted position, are masked out by the per-slot
+    ``valid_len`` of ``decode_step``, and are overwritten by the next
+    block's writes (which restart from the corrected token).
+
+    Args:
+      cfg: draft model configuration (the ensemble's shared ``cfg``).
+      k: verify-block length (``>= 1``).
+
+    Returns:
+      The ``propose`` closure; ``token`` is ``(B,)`` int32 and ``pos``
+      the ``(B,)`` per-slot position of ``token``.
+    """
+    if k < 1:
+        raise ValueError(f"speculative block length must be >= 1, got {k}")
+    if k == 1:
+        def propose_identity(draft_params, draft_cache, token, pos):
+            del draft_params, pos
+            return token[:, None], draft_cache
+        return propose_identity
+
+    def propose(draft_params, draft_cache, token, pos):
+        def body(carry, _):
+            tok, cache, p = carry
+            logits, cache = decode_step(draft_params, cfg, cache,
+                                        tok[:, None], p)
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1).astype(token.dtype)
+            return (nxt, cache, p + 1), nxt
+        (_, new_cache, _), drafts = jax.lax.scan(
+            body, (token, draft_cache, pos), None, length=k - 1)
+        block = jnp.concatenate([token[:, None], jnp.moveaxis(drafts, 0, 1)],
+                                axis=1)
+        return block, new_cache
+
+    return propose
+
+
+def accept_block(block: jnp.ndarray, agg_logits: jnp.ndarray, *,
+                 margin: float = 0.0
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Byzantine-safe acceptance: test draft tokens against the aggregate.
+
+    Position ``j`` of the block was fed at sequence position ``p + j``,
+    so ``agg_logits[:, j]`` is the robust ensemble's distribution for
+    the token at ``p + j + 1``.  Proposal ``block[:, j+1]`` is accepted
+    iff its aggregated logit is within ``margin`` of that distribution's
+    maximum (``margin = 0``: the proposal must *be* an argmax).  The
+    emitted stream is the longest accepted prefix plus one correction —
+    the aggregate's own argmax at the first rejected position — so every
+    call emits between 1 and ``k`` tokens per slot and the accepted
+    stream never depends on any single replica's logits.
+
+    Args:
+      block: ``(B, k)`` verify block ``[t0, d1, ..., d_{k-1}]``.
+      agg_logits: ``(B, k, vocab)`` robustly aggregated verifier logits.
+      margin: acceptance slack in logit units (``0.0`` = exact argmax
+        survival; larger values accept near-argmax proposals and only
+        widen acceptance, never the attack surface — every emitted token
+        still carries an aggregated logit within ``margin`` of the max).
+
+    Returns:
+      ``(emitted, count, verifier_argmax)`` — ``emitted`` is ``(B, k)``
+      int32 whose first ``count[b]`` entries are slot ``b``'s tokens for
+      positions ``p+1 ..`` (entries past ``count`` are padding),
+      ``count`` is ``(B,)`` int32 in ``[1, k]``, and ``verifier_argmax``
+      the ``(B, k)`` argmax of ``agg_logits`` (diagnostics / the
+      ``k = 1`` greedy token).
+    """
+    b, k = block.shape
+    v = jnp.argmax(agg_logits, axis=-1).astype(jnp.int32)     # (B, k)
+    if k == 1:
+        return v, jnp.ones((b,), jnp.int32), v
+    drafts = block[:, 1:].astype(jnp.int32)                   # (B, k-1)
+    scored = agg_logits[:, :-1, :]                            # (B, k-1, V)
+    top = jnp.max(scored, axis=-1)
+    dscore = jnp.take_along_axis(scored, drafts[..., None],
+                                 axis=-1)[..., 0]
+    ok = dscore >= top - jnp.float32(margin)                  # (B, k-1)
+    prefix = jnp.cumprod(ok.astype(jnp.int32), axis=1)
+    m = jnp.sum(prefix, axis=1)                               # accepted, 0..k-1
+    count = m + 1
+    cols = jnp.arange(k)[None, :]
+    drafts_pad = jnp.concatenate([drafts, drafts[:, -1:]], axis=1)
+    emitted = jnp.where(cols < m[:, None], drafts_pad, v)
+    return emitted, count.astype(jnp.int32), v
+
+
+def draft_cache_view(stacked_cache: Any, replica: int) -> Any:
+    """Slice one replica's cache out of a replica-stacked cache pytree.
+
+    Used at admission time: the engine prefills a request's prompt once
+    per replica (the robust prefill step) and splices replica
+    ``spec.draft_replica``'s slice into the engine's standalone draft
+    cache, so the draft decodes from exactly the context its own replica
+    computed.
+
+    Args:
+      stacked_cache: cache pytree with a leading ``(n_replicas,)`` axis
+        on every leaf (see ``repro.dist.serve_robust.replicate_cache``).
+      replica: which replica's slice to take.
+
+    Returns:
+      The cache pytree without the replica axis.
+    """
+    return jax.tree_util.tree_map(lambda x: x[replica], stacked_cache)

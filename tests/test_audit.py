@@ -37,7 +37,8 @@ class TestSweep:
         assert report.ok(), report.violations
         # every section actually ran
         assert set(report.sections) == {"invariants", "quorum",
-                                        "identity", "staleness", "fp32"}
+                                        "identity", "staleness", "fp32",
+                                        "speculative"}
 
     def test_roster_covers_every_family(self):
         roster = audit_roster()

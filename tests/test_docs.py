@@ -50,6 +50,7 @@ def test_lint_catches_bad_snippet(tmp_path):
 @pytest.mark.parametrize("pkg", ["repro.dist", "repro.kernels",
                                  "repro.serving", "repro.dist.serve",
                                  "repro.dist.serve_robust",
+                                 "repro.serving.speculative",
                                  "repro.dist.async_train",
                                  "repro.agg.staleness",
                                  "repro.audit", "repro.audit.invariants",
@@ -79,7 +80,7 @@ def test_serving_doc_covers_exported_api():
     text = (REPO / "docs" / "serving.md").read_text()
     names = set()
     for pkg in ("repro.dist.serve_robust", "repro.dist.serve",
-                "repro.serving"):
+                "repro.serving", "repro.serving.speculative"):
         names.update(importlib.import_module(pkg).__all__)
     missing = sorted(n for n in names if n not in text)
     assert not missing, f"docs/serving.md misses exported API: {missing}"

@@ -1,0 +1,462 @@
+"""Robust speculative decoding + continuous batching.
+
+Pins the contracts of the speculative serving stack:
+
+  1. **multi-token verify** — ``verify_step`` over a ``(B, k)`` block
+     matches ``k`` sequential ``decode_step`` calls to float-
+     accumulation tolerance (the batched attention einsum may contract
+     in a different order) with identical argmaxes, and
+     ``verify_supported`` gates the architectures whose caches cannot
+     roll back rejected drafts;
+  2. **robust verify semantics** — ``make_robust_verify_step``'s
+     per-position scan aggregation matches ``k`` calls of the per-token
+     robust serve step (same tolerance; ``AggState`` of stateful rules
+     threads identically);
+  3. **k = 1 identity** — the speculative engine at ``speculative_k=1``
+     reproduces the per-token engine stream bitwise for every registered
+     tree rule (stateless speculation is additionally lossless at any
+     ``k``);
+  4. **Byzantine acceptance** — a poisoned (colluding) draft and ``f``
+     poisoned verifiers at the ``n = 4f + 3`` quorum edge both leave the
+     accepted stream equal to the clean-ensemble greedy stream;
+  5. **continuous batching** — ``submit``/``step`` admit queued requests
+     into freed slots mid-stream, and a reused slot never inherits the
+     previous occupant's aggregation state;
+  6. **fused backend** — ``distance_backend="fused"`` threads through
+     the verify path and matches ``xla`` on ``(n, B*k, vocab)`` stacks.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.agg import AggSpec, resolve_rule, rule_names
+from repro.configs import get_reduced
+from repro.dist.serve_robust import (aggregate_logits, init_ensemble_state,
+                                     make_robust_serve_step,
+                                     make_robust_verify_step,
+                                     poison_replicas, replicate_params,
+                                     reset_slot_state)
+from repro.models import (decode_step, init_model, prefill, verify_step,
+                          verify_supported)
+from repro.models.config import ModelConfig
+from repro.serving import (Request, ServingEngine, accept_block,
+                           draft_cache_view, make_draft_propose)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _micro_cfg() -> ModelConfig:
+    """One-layer dense micro model: fast jit, real prefill/decode path."""
+    return ModelConfig(
+        name="spec-test", arch_type="dense",
+        n_layers=1, d_model=64, n_heads=2, n_kv_heads=2,
+        d_ff=128, vocab_size=128, head_dim=32,
+        ffn_act="swiglu", layer_pattern=("attn",),
+        tie_embeddings=True, param_dtype="float32",
+    )
+
+
+def _req(rid: int, seed: int, n_new: int, vocab: int,
+         plen: int = 5) -> Request:
+    rng = np.random.RandomState(seed)
+    return Request(rid=rid,
+                   prompt=rng.randint(0, vocab, size=(plen,)
+                                      ).astype(np.int32),
+                   max_new_tokens=n_new)
+
+
+# ---------------------------------------------------------------------------
+# 1. multi-token verify path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3_2_3b", "gemma_2b"])
+def test_verify_step_matches_sequential_decode(arch):
+    cfg = get_reduced(arch)
+    ok, why = verify_supported(cfg)
+    assert ok, why
+    params = init_model(KEY, cfg)
+    B, P, k, L = 2, 5, 4, 32
+    toks = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    _, cache = prefill(params, cfg, toks, cache_len=L)
+    cache_seq = jax.tree_util.tree_map(lambda x: x.copy(), cache)
+    block = jax.random.randint(jax.random.PRNGKey(1), (B, k), 0,
+                               cfg.vocab_size)
+    pos = jnp.full((B,), P, jnp.int32)
+    vlog, _ = verify_step(params, cfg, cache, block, pos)
+    for j in range(k):
+        lj, cache_seq = decode_step(params, cfg, cache_seq,
+                                    block[:, j:j + 1], pos + j)
+        np.testing.assert_allclose(np.asarray(vlog[:, j]),
+                                   np.asarray(lj[:, 0]), atol=1e-5)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(vlog[:, j], -1)),
+            np.asarray(jnp.argmax(lj[:, 0], -1)))
+
+
+def test_verify_supported_gates_ring_and_ssm_caches():
+    # swa / chunked ring caches wrap rejected-draft garbage onto valid
+    # entries; mamba's recurrent state cannot roll back at all
+    swa = get_reduced("mixtral_8x22b")
+    ok, why = verify_supported(swa)
+    assert not ok and "swa" in why
+    with pytest.raises(ValueError):
+        make_robust_verify_step(swa, AggSpec(f=1, gar="krum"))
+
+
+def test_verify_step_staggered_positions():
+    # per-slot position vectors: slots verify at different depths
+    cfg = _micro_cfg()
+    params = init_model(KEY, cfg)
+    B, k, L = 2, 3, 32
+    toks = jax.random.randint(KEY, (B, 6), 0, cfg.vocab_size)
+    _, cache = prefill(params, cfg, toks, cache_len=L)
+    cache_seq = jax.tree_util.tree_map(lambda x: x.copy(), cache)
+    block = jax.random.randint(jax.random.PRNGKey(1), (B, k), 0,
+                               cfg.vocab_size)
+    pos = jnp.asarray([6, 4], jnp.int32)  # slot 1 behind slot 0
+    vlog, _ = verify_step(params, cfg, cache, block, pos)
+    for j in range(k):
+        lj, cache_seq = decode_step(params, cfg, cache_seq,
+                                    block[:, j:j + 1], pos + j)
+        np.testing.assert_allclose(np.asarray(vlog[:, j]),
+                                   np.asarray(lj[:, 0]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# 2. robust verify == k per-token robust steps (AggState included)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gar", ["krum", "cwmed", "bulyan-krum",
+                                 "buffered-krum",
+                                 "centered_clip_momentum"])
+def test_robust_verify_scan_matches_per_position_aggregation(gar):
+    # the verify step's lax.scan must aggregate per position in stream
+    # order, threading the AggState exactly like k per-token
+    # aggregations over the same logits stack would — bitwise
+    cfg = _micro_cfg()
+    n, f, B, P, k, L = 7, 1, 2, 5, 4, 32
+    params = init_model(KEY, cfg)
+    sp = replicate_params(params, n, jitter=1e-3,
+                          key=jax.random.PRNGKey(7))
+    toks = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    scache = jax.vmap(lambda p: prefill(p, cfg, toks, cache_len=L)[1])(sp)
+    spec = AggSpec(f=f, gar=gar)
+    verify = jax.jit(make_robust_verify_step(cfg, spec))
+    state = init_ensemble_state(spec, n, B, cfg.vocab_size)
+    block = jax.random.randint(jax.random.PRNGKey(1), (B, k), 0,
+                               cfg.vocab_size)
+    pos = jnp.full((B,), P, jnp.int32)
+    agg_k, _, _, st_new = verify(
+        sp, jax.tree_util.tree_map(lambda x: x.copy(), scache),
+        block, pos, state)
+    # reference: the identical model pass, then k sequential
+    # aggregate_logits calls threading the state by hand
+    stack, _ = jax.vmap(
+        lambda p, c: verify_step(p, cfg, c, block, pos)
+    )(sp, jax.tree_util.tree_map(lambda x: x.copy(), scache))
+    stack = stack.astype(jnp.float32)
+    stateful = spec.rule().stateful
+    st_ref = state
+    for j in range(k):
+        out = aggregate_logits(stack[:, :, j, :], f, gar,
+                               state=st_ref if stateful else None)
+        if stateful:
+            agg, _, st_ref = out
+        else:
+            agg, _ = out
+        # jit+scan may fuse the trimmed-mean arithmetic differently
+        # than the eager reference — selection itself is exact
+        np.testing.assert_allclose(np.asarray(agg_k[:, j]),
+                                   np.asarray(agg), atol=1e-6)
+        np.testing.assert_array_equal(
+            np.asarray(jnp.argmax(agg_k[:, j], -1)),
+            np.asarray(jnp.argmax(agg, -1)))
+    if stateful:
+        for a, b in zip(jax.tree_util.tree_leaves(st_new),
+                        jax.tree_util.tree_leaves(st_ref)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 3. engine k=1 identity (every registered tree rule) + lossless k>1
+# ---------------------------------------------------------------------------
+
+def _tree_rules():
+    names = [r for r in rule_names()
+             if resolve_rule(r).tree_fn is not None]
+    return names + ["bulyan-krum", "buffered-krum", "fused-krum"]
+
+
+@pytest.mark.parametrize("gar", _tree_rules())
+def test_engine_speculative_k1_bitwise_identity(gar):
+    cfg = _micro_cfg()
+    f = 1
+    n = max(resolve_rule(gar).min_n(f), 3)
+    params = init_model(KEY, cfg)
+    sp = replicate_params(params, n, jitter=1e-3,
+                          key=jax.random.PRNGKey(7))
+    reqs = lambda: [_req(0, 0, 6, cfg.vocab_size),
+                    _req(1, 1, 9, cfg.vocab_size)]
+    base = AggSpec(f=f, gar=gar)
+    ref = ServingEngine(sp, cfg, n_slots=2, cache_len=64,
+                        ensemble=base).run(reqs(), 64)
+    spec = dataclasses.replace(base, speculative_k=1)
+    out = ServingEngine(sp, cfg, n_slots=2, cache_len=64,
+                        ensemble=spec).run(reqs(), 64)
+    assert out == ref
+
+
+@pytest.mark.parametrize("gar", ["krum", "bulyan-krum", "cwmed"])
+def test_engine_speculative_stateless_lossless_any_k(gar):
+    # greedy speculation with an honest draft never changes a stateless
+    # rule's stream — rejections only cost throughput
+    cfg = _micro_cfg()
+    params = init_model(KEY, cfg)
+    sp = replicate_params(params, 7, jitter=1e-3,
+                          key=jax.random.PRNGKey(7))
+    reqs = lambda: [_req(0, 0, 8, cfg.vocab_size),
+                    _req(1, 1, 12, cfg.vocab_size)]
+    base = AggSpec(f=1, gar=gar)
+    ref = ServingEngine(sp, cfg, n_slots=2, cache_len=64,
+                        ensemble=base).run(reqs(), 64)
+    for k in (2, 4):
+        spec = dataclasses.replace(base, speculative_k=k)
+        out = ServingEngine(sp, cfg, n_slots=2, cache_len=64,
+                            ensemble=spec).run(reqs(), 64)
+        assert out == ref, f"k={k} changed a stateless greedy stream"
+
+
+# ---------------------------------------------------------------------------
+# 4. Byzantine acceptance: poisoned draft / poisoned verifiers
+# ---------------------------------------------------------------------------
+
+def _clean_and_poisoned(cfg, n, f):
+    params = init_model(KEY, cfg)
+    honest = replicate_params(params, n, jitter=1e-3,
+                              key=jax.random.PRNGKey(7))
+    return honest, poison_replicas(honest, f, "signflip", scale=10.0)
+
+
+def test_poisoned_draft_cannot_change_the_stream():
+    # the drafting replica colludes (last replica poisoned, draft reads
+    # it): every proposal dies at the aggregate, the emitted stream is
+    # the clean ensemble's greedy stream
+    cfg = _micro_cfg()
+    n, f = 7, 1
+    honest, poisoned = _clean_and_poisoned(cfg, n, f)
+    reqs = lambda: [_req(0, 3, 12, cfg.vocab_size, plen=6)]
+    clean = ServingEngine(honest, cfg, n_slots=1, cache_len=64,
+                          ensemble=AggSpec(f=f, gar="bulyan-krum")
+                          ).run(reqs(), 64)
+    spec = AggSpec(f=f, gar="bulyan-krum", speculative_k=4,
+                   draft_replica=n - 1)
+    out = ServingEngine(poisoned, cfg, n_slots=1, cache_len=64,
+                        ensemble=spec).run(reqs(), 64)
+    assert out == clean
+
+
+def test_poisoned_verifiers_at_quorum_edge():
+    # n = 4f + 3 (bulyan quorum edge): f poisoned verifiers can neither
+    # veto honest drafts nor force their own tokens
+    cfg = _micro_cfg()
+    n, f = 7, 1
+    honest, poisoned = _clean_and_poisoned(cfg, n, f)
+    reqs = lambda: [_req(0, 3, 12, cfg.vocab_size, plen=6)]
+    clean = ServingEngine(honest, cfg, n_slots=1, cache_len=64,
+                          ensemble=AggSpec(f=f, gar="bulyan-krum")
+                          ).run(reqs(), 64)
+    spec = AggSpec(f=f, gar="bulyan-krum", speculative_k=4,
+                   draft_replica=0)
+    out = ServingEngine(poisoned, cfg, n_slots=1, cache_len=64,
+                        ensemble=spec).run(reqs(), 64)
+    assert out == clean
+
+
+# ---------------------------------------------------------------------------
+# 5. continuous batching: step-time admission + slot-reuse hygiene
+# ---------------------------------------------------------------------------
+
+def test_submit_step_admits_mid_stream():
+    cfg = _micro_cfg()
+    params = init_model(KEY, cfg)
+    eng = ServingEngine(params, cfg, n_slots=1, cache_len=64)
+    a = _req(0, 0, 3, cfg.vocab_size)
+    eng.submit(a)
+    eng.step()          # admits a, decodes one token
+    assert eng.active[0] is a and len(a.generated) == 2
+    b = _req(1, 1, 4, cfg.vocab_size)
+    eng.submit(b)       # queued: the only slot is busy
+    eng.step()          # a reaches max_new_tokens, slot frees
+    assert a.done and eng.active[0] is None
+    eng.step()          # b admitted into the freed slot mid-stream
+    assert eng.active[0] is b and b.generated
+    for _ in range(8):
+        eng.step()
+    assert b.done and len(b.generated) == 4
+
+
+@pytest.mark.parametrize("spec_k", [0, 4])
+def test_slot_reuse_staggered_lengths_matches_solo(spec_k):
+    # stateless ensemble: a request admitted into a reused slot decodes
+    # exactly the stream it would decode alone
+    cfg = _micro_cfg()
+    params = init_model(KEY, cfg)
+    sp = replicate_params(params, 7, jitter=1e-3,
+                          key=jax.random.PRNGKey(7))
+    spec = AggSpec(f=1, gar="krum", speculative_k=spec_k)
+    reqs = [_req(0, 0, 3, cfg.vocab_size),
+            _req(1, 1, 12, cfg.vocab_size),
+            _req(2, 2, 6, cfg.vocab_size)]
+    out = ServingEngine(sp, cfg, n_slots=2, cache_len=64,
+                        ensemble=spec).run(reqs, 64)
+    for seed, rid, n_new in ((0, 0, 3), (1, 1, 12), (2, 2, 6)):
+        solo = ServingEngine(sp, cfg, n_slots=1, cache_len=64,
+                             ensemble=spec)
+        want = solo.run([_req(rid, seed, n_new, cfg.vocab_size)], 64)
+        assert out[rid] == want[rid]
+
+
+def test_slot_reuse_resets_stateful_history():
+    # the regression this PR fixes: with a stateful rule, the stream of
+    # a request admitted into a reused slot must not depend on the
+    # slot's previous occupant
+    cfg = _micro_cfg()
+    params = init_model(KEY, cfg)
+    sp = replicate_params(params, 5, jitter=1e-3,
+                          key=jax.random.PRNGKey(7))
+    spec = AggSpec(f=1, gar="buffered-krum")
+
+    def stream_after(first_seed):
+        reqs = [_req(0, first_seed, 3, cfg.vocab_size),
+                _req(1, 1, 12, cfg.vocab_size),
+                _req(2, 2, 6, cfg.vocab_size)]
+        return ServingEngine(sp, cfg, n_slots=2, cache_len=64,
+                             ensemble=spec).run(reqs, 64)[2]
+
+    assert stream_after(0) == stream_after(9)
+
+
+def test_reset_slot_state_zeroes_one_column():
+    spec = AggSpec(f=1, gar="buffered-krum")
+    state = init_ensemble_state(spec, n_replicas=5, batch=3, vocab=8)
+    state = state._replace(
+        history=tuple(jnp.ones_like(h) for h in state.history))
+    out = reset_slot_state(state, slot=1)
+    h = np.asarray(out.history[0])
+    assert (h[:, :, 1] == 0.0).all()
+    assert (h[:, :, 0] == 1.0).all() and (h[:, :, 2] == 1.0).all()
+    assert reset_slot_state(None, 0) is None
+
+
+# ---------------------------------------------------------------------------
+# 6. draft propose + acceptance units
+# ---------------------------------------------------------------------------
+
+def test_draft_propose_k1_never_runs_the_draft():
+    cfg = _micro_cfg()
+    propose = make_draft_propose(cfg, 1)
+    token = jnp.asarray([3, 5], jnp.int32)
+    cache = {"sentinel": jnp.zeros((2, 4))}
+    block, out_cache = propose(None, cache, token,
+                               jnp.zeros((2,), jnp.int32))
+    np.testing.assert_array_equal(np.asarray(block),
+                                  [[3], [5]])
+    assert out_cache is cache
+
+
+def test_draft_propose_matches_greedy_decode():
+    cfg = _micro_cfg()
+    params = init_model(KEY, cfg)
+    B, P, k, L = 2, 5, 4, 32
+    toks = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    _, cache = prefill(params, cfg, toks, cache_len=L)
+    cache_seq = jax.tree_util.tree_map(lambda x: x.copy(), cache)
+    token = jnp.asarray([1, 2], jnp.int32)
+    pos = jnp.full((B,), P, jnp.int32)
+    block, _ = make_draft_propose(cfg, k)(params, cache, token, pos)
+    np.testing.assert_array_equal(np.asarray(block[:, 0]),
+                                  np.asarray(token))
+    tok = token
+    for j in range(1, k):
+        lj, cache_seq = decode_step(params, cfg, cache_seq,
+                                    tok[:, None], pos + j - 1)
+        tok = jnp.argmax(lj[:, 0], axis=-1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(block[:, j]),
+                                      np.asarray(tok))
+
+
+def test_accept_block_semantics():
+    agg = jnp.asarray([
+        # slot 0: argmaxes are [2, 0, 1, 3]
+        [[0., 1., 9., 0.], [9., 0., 1., 0.],
+         [0., 9., 0., 1.], [0., 0., 1., 9.]],
+        # slot 1: argmaxes are [1, 1, 1, 1]
+        [[0., 9., 0., 0.], [0., 9., 0., 0.],
+         [0., 9., 0., 0.], [0., 9., 0., 0.]],
+    ], jnp.float32)
+    # slot 0 drafts [2, 0, 2]: first two accepted, third rejected ->
+    # emit [2, 0, 1(corrected)], count 3.  slot 1 drafts [0, 1, 1]:
+    # first rejected -> emit [1], count 1.
+    block = jnp.asarray([[7, 2, 0, 2], [7, 0, 1, 1]], jnp.int32)
+    emitted, count, v = accept_block(block, agg)
+    assert count.tolist() == [3, 1]
+    assert emitted[0, :3].tolist() == [2, 0, 1]
+    assert emitted[1, :1].tolist() == [1]
+    np.testing.assert_array_equal(np.asarray(v),
+                                  [[2, 0, 1, 3], [1, 1, 1, 1]])
+    # margin widens acceptance: a near-argmax draft survives
+    agg2 = agg.at[0, 2, 2].set(8.5)        # draft 2 trails argmax by 0.5
+    _, count0, _ = accept_block(block, agg2)
+    _, count1, _ = accept_block(block, agg2, margin=1.0)
+    assert count0.tolist()[0] == 3 and count1.tolist()[0] == 4
+    # k=1: no drafting, the aggregate argmax is the emission
+    e1, c1, _ = accept_block(block[:, :1], agg[:, :1])
+    assert c1.tolist() == [1, 1] and e1[:, 0].tolist() == [2, 1]
+
+
+def test_draft_cache_view_slices_one_replica():
+    stacked = {"k": jnp.arange(12.).reshape(3, 2, 2)}
+    view = draft_cache_view(stacked, 1)
+    np.testing.assert_array_equal(np.asarray(view["k"]),
+                                  np.arange(4., 8.).reshape(2, 2))
+
+
+# ---------------------------------------------------------------------------
+# 7. fused distance backend through the verify path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("gar", ["krum", "geomed", "bulyan-krum"])
+def test_fused_backend_matches_xla_on_block_stacks(gar):
+    n, f, B, k, V = 7, 1, 2, 4, 64
+    stack = jax.random.normal(KEY, (n, B * k, V), jnp.float32)
+    a_xla, _ = aggregate_logits(stack, f, gar, distance_backend="xla")
+    a_fused, _ = aggregate_logits(stack, f, gar, distance_backend="fused")
+    np.testing.assert_allclose(np.asarray(a_fused), np.asarray(a_xla),
+                               rtol=0, atol=1e-5)
+
+
+def test_fused_backend_through_robust_verify_step():
+    cfg = _micro_cfg()
+    n, f, B, P, k, L = 7, 1, 2, 5, 4, 32
+    params = init_model(KEY, cfg)
+    sp = replicate_params(params, n, jitter=1e-3,
+                          key=jax.random.PRNGKey(7))
+    toks = jax.random.randint(KEY, (B, P), 0, cfg.vocab_size)
+    scache = jax.vmap(lambda p: prefill(p, cfg, toks, cache_len=L)[1])(sp)
+    block = jax.random.randint(jax.random.PRNGKey(1), (B, k), 0,
+                               cfg.vocab_size)
+    pos = jnp.full((B,), P, jnp.int32)
+    out = {}
+    for backend in ("xla", "fused"):
+        spec = AggSpec(f=f, gar="krum", distance_backend=backend,
+                       speculative_k=k)
+        verify = jax.jit(make_robust_verify_step(cfg, spec))
+        agg, _, _, _ = verify(
+            sp, jax.tree_util.tree_map(lambda x: x.copy(), scache),
+            block, pos, None)
+        out[backend] = np.asarray(agg)
+    np.testing.assert_array_equal(out["fused"], out["xla"])
