@@ -27,14 +27,15 @@ def main() -> None:
 
     from benchmarks import (fig2_mnist_attack, fig3_cifar_attack,
                             fig45_bulyan_defense, fig6_bulyan_cost,
-                            gar_async, gar_throughput, leeway_scaling,
-                            roofline, serve_robust)
+                            gar_async, gar_reputation, gar_throughput,
+                            leeway_scaling, roofline, serve_robust)
 
     steps2 = 400 if args.full else 120
     steps3 = 200 if args.full else 50
     steps45 = 400 if args.full else 120
     steps6 = 150 if args.full else 60
     steps_async = 120 if args.full else 60
+    steps_rep = 120 if args.full else 40
     seeded = {} if args.seed is None else {"seed": args.seed}
 
     benches = [
@@ -45,6 +46,8 @@ def main() -> None:
         ("gar_buffered", lambda: gar_throughput.main_buffered()),
         ("gar_async", lambda: gar_async.main(steps=steps_async,
                                              **seeded)),
+        ("gar_reputation", lambda: gar_reputation.main(steps=steps_rep,
+                                                       **seeded)),
         ("serve_robust", lambda: serve_robust.main()),
         ("serve_speculative", lambda: serve_robust.main_speculative()),
         ("fig2", lambda: fig2_mnist_attack.main(steps=steps2)),

@@ -25,11 +25,16 @@ from repro.agg.specs import AggSpec, check_quorum
 from repro.agg.state import AggState, init_state
 from repro.agg.buffered import centered_clip_momentum, make_buffered
 from repro.agg.staleness import make_stale, stale_scale, stale_weights
+from repro.agg.reputation import (make_reputation, reputation_scale,
+                                  reputation_scores, step_size_multiplier,
+                                  tree_reputation_scores, update_reputation)
 
 __all__ = [
     "AggSpec", "AggState", "AggregatorRule", "TreeAgg", "TreeContext",
     "centered_clip_momentum", "check_quorum", "init_state",
-    "make_buffered", "make_stale", "quorum", "register_rule",
-    "register_tree_impl", "resolve_rule", "rule_names", "stale_scale",
-    "stale_weights",
+    "make_buffered", "make_reputation", "make_stale", "quorum",
+    "register_rule", "register_tree_impl", "reputation_scale",
+    "reputation_scores", "resolve_rule", "rule_names", "stale_scale",
+    "stale_weights", "step_size_multiplier", "tree_reputation_scores",
+    "update_reputation",
 ]

@@ -43,7 +43,8 @@ FUSED_BASES = FUSED_MODES
 
 #: stateful wrapper prefixes fused_name recurses through, longest first
 #: so "stale-exp-" is not mis-split as "stale-" + "exp-..."
-_WRAPPER_PREFIXES = ("stale-exp-", "stale-inv-", "stale-", "buffered-")
+_WRAPPER_PREFIXES = ("stale-exp-", "stale-inv-", "stale-", "buffered-",
+                     "reputation-")
 
 
 def fused_name(gar: str) -> Optional[str]:
@@ -57,9 +58,10 @@ def fused_name(gar: str) -> Optional[str]:
     Returns:
       The ``fused-``-prefixed name whose composite lowers the same rule
       onto the megakernel (wrapper prefixes are preserved:
-      ``"stale-krum" -> "stale-fused-krum"``), or ``None`` when the base
-      has no fused lowering (``brute``, ``average``, ``centered_clip``,
-      ...).
+      ``"stale-krum" -> "stale-fused-krum"``,
+      ``"reputation-krum" -> "reputation-fused-krum"``), or ``None``
+      when the base has no fused lowering (``brute``, ``average``,
+      ``centered_clip``, ...).
     """
     if gar.startswith("fused-"):
         return gar

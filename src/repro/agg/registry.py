@@ -24,7 +24,10 @@ from the carried ``GradientBus`` before delegating to the base
 (``repro.agg.staleness`` — the asynchronous runtime's rule family), and
 ``"fused-<base>"`` lowers the base onto the single-sweep Pallas
 megakernel (``repro.agg.fused`` / ``repro.kernels.fused_agg``) with the
-base's quorum and invariant contract intact.
+base's quorum and invariant contract intact, and
+``"reputation-<base>"`` blends the worker stack by carried per-worker
+trust scores before delegating (``repro.agg.reputation`` — the
+arbitrary-f family whose quorum is constant in f).
 Resolved composites are cached, so repeated lookups are dict hits.
 """
 from __future__ import annotations
@@ -227,8 +230,9 @@ RULES: Dict[str, AggregatorRule] = {}
 #: registration is order-independent across the contributing modules
 _TREE_IMPLS: Dict[str, Callable] = {}
 
-#: (name, history_window) -> AggregatorRule cache for resolved composites
-_COMPOSITES: Dict[Tuple[str, int], AggregatorRule] = {}
+#: (name, history_window, rep_lr, rep_decay) -> AggregatorRule cache for
+#: resolved composites
+_COMPOSITES: Dict[Tuple[str, int, float, float], AggregatorRule] = {}
 
 _POPULATED = False
 
@@ -332,22 +336,41 @@ def _buffered_rule(name: str, window: int) -> AggregatorRule:
     return make_buffered(name, base_rule, window)
 
 
-def _stale_rule(name: str, window: int) -> AggregatorRule:
+def _stale_rule(name: str, window: int, rep_lr: float,
+                rep_decay: float) -> AggregatorRule:
     from repro.agg.staleness import make_stale
     rest = name.split("-", 1)[1]
     weight = "inv"
     head = rest.split("-", 1)[0]
     if head in ("inv", "exp") and "-" in rest:
         weight, rest = rest.split("-", 1)
-    base_rule = resolve_rule(rest, history_window=window)
+    # forward the reputation schedule so "stale-reputation-<base>"
+    # nesting resolves the inner composite with the caller's params
+    base_rule = resolve_rule(rest, history_window=window, rep_lr=rep_lr,
+                             rep_decay=rep_decay)
     if "bus" in base_rule.state_fields:
         raise KeyError(
             f"stale-* cannot nest another stale rule, got {rest!r}")
     return make_stale(name, base_rule, weight=weight)
 
 
-def resolve_rule(name: str,
-                 history_window: Optional[int] = None) -> AggregatorRule:
+def _reputation_rule(name: str, window: int, rep_lr: float,
+                     rep_decay: float) -> AggregatorRule:
+    from repro.agg.reputation import make_reputation
+    rest = name.split("-", 1)[1]
+    base_rule = resolve_rule(rest, history_window=window, rep_lr=rep_lr,
+                             rep_decay=rep_decay)
+    if "reputation" in base_rule.state_fields:
+        raise KeyError(
+            f"reputation-* cannot nest another reputation rule, "
+            f"got {rest!r}")
+    return make_reputation(name, base_rule, rep_lr=rep_lr,
+                           rep_decay=rep_decay)
+
+
+def resolve_rule(name: str, history_window: Optional[int] = None,
+                 rep_lr: Optional[float] = None,
+                 rep_decay: Optional[float] = None) -> AggregatorRule:
     """Resolve a rule name to its :class:`AggregatorRule` record.
 
     This is the single string->rule resolver every layer dispatches
@@ -356,13 +379,20 @@ def resolve_rule(name: str,
 
     Args:
       name: rule name — a registered key, ``"bulyan-<base>"``,
-        ``"buffered-<base>"``, ``"stale[-inv|-exp]-<base>"``, or
-        ``"fused-<base>"`` (bases may nest, e.g.
-        ``"buffered-bulyan-krum"``, ``"stale-exp-bulyan-krum"``,
-        ``"stale-fused-krum"``).
+        ``"buffered-<base>"``, ``"stale[-inv|-exp]-<base>"``,
+        ``"fused-<base>"``, or ``"reputation-<base>"`` (bases may nest,
+        e.g. ``"buffered-bulyan-krum"``, ``"stale-exp-bulyan-krum"``,
+        ``"stale-fused-krum"``, ``"reputation-stale-krum"``,
+        ``"stale-reputation-krum"``).
       history_window: sliding-window length for ``buffered-*`` rules
         (``None`` = :data:`DEFAULT_HISTORY_WINDOW`; ignored otherwise;
         forwarded through ``stale-*`` to a buffered base).
+      rep_lr: EMA rate of the ``reputation-*`` score schedule (``None``
+        = ``repro.agg.reputation.DEFAULT_REP_LR``; ignored by other
+        rules; forwarded through wrapper prefixes to a nested
+        reputation base).
+      rep_decay: multiplicative forgetting factor of the ``reputation-*``
+        schedule (``None`` = ``DEFAULT_REP_DECAY``; same forwarding).
 
     Returns:
       The resolved :class:`AggregatorRule`.  Raises ``KeyError`` for
@@ -371,9 +401,12 @@ def resolve_rule(name: str,
     _populate()
     if name in RULES:
         return RULES[name]
+    from repro.agg.reputation import DEFAULT_REP_DECAY, DEFAULT_REP_LR
     window = (DEFAULT_HISTORY_WINDOW if history_window is None
               else int(history_window))
-    key = (name, window)
+    lr = DEFAULT_REP_LR if rep_lr is None else float(rep_lr)
+    decay = DEFAULT_REP_DECAY if rep_decay is None else float(rep_decay)
+    key = (name, window, lr, decay)
     if key in _COMPOSITES:
         return _COMPOSITES[key]
     if name.startswith("bulyan"):
@@ -384,15 +417,17 @@ def resolve_rule(name: str,
         # exact-prefix match: a dash-less "stale..." typo (or the
         # stale_replay *attack* name passed as a GAR) must hit the
         # unknown-name error below, not fall back to a default base
-        rule = _stale_rule(name, window)
+        rule = _stale_rule(name, window, lr, decay)
+    elif name.startswith("reputation-"):
+        rule = _reputation_rule(name, window, lr, decay)
     elif name.startswith("fused-"):
         from repro.agg.fused import make_fused
         rule = make_fused(name)
     else:
         raise KeyError(
             f"unknown GAR {name!r}; have {sorted(RULES)} plus "
-            f"'bulyan-<base>', 'buffered-<base>', 'stale-<base>' and "
-            f"'fused-<base>'")
+            f"'bulyan-<base>', 'buffered-<base>', 'stale-<base>', "
+            f"'fused-<base>' and 'reputation-<base>'")
     _COMPOSITES[key] = rule
     return rule
 

@@ -13,7 +13,7 @@ so the two historic field orders can no longer conflict.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Any, Optional
 
 from repro.agg.registry import resolve_rule
 
@@ -55,6 +55,20 @@ class AggSpec:
         the serving engine and ``repro.serving.speculative`` read them;
         the acceptance rule always tests drafts against the *robustly
         aggregated* verifier distribution, never a single replica.
+      rep_lr / rep_decay — the ``reputation-*`` score schedule
+        (``repro.agg.reputation``): EMA rate and forgetting factor,
+        forwarded to ``resolve_rule``; ``None`` takes the module
+        defaults.  A *set* (truthy) ``rep_lr`` additionally switches on
+        the staleness-adaptive step-size tail: the train steps multiply
+        the aggregated update by ``step_size_multiplier(state)`` when
+        the resolved rule carries reputation.  Other rules ignore both.
+      aux_batch — optional ``(inputs, labels)`` auxiliary clean batch
+        (ByGARS): when set and the rule carries reputation, the trainer
+        scores worker agreement against the gradient of the loss on
+        this batch instead of the emitted aggregate — the variant that
+        stays sound under a colluding majority, which can own the
+        aggregate itself.  Excluded from spec equality (it holds
+        arrays).
     """
 
     f: int
@@ -71,6 +85,9 @@ class AggSpec:
     async_schedule: str = "fixed"      # fixed | random
     speculative_k: int = 0             # verify-block length (0/1 = per-token)
     draft_replica: int = 0             # ensemble row the draft model reads
+    rep_lr: Optional[float] = None     # reputation-* EMA rate (None=default)
+    rep_decay: Optional[float] = None  # reputation-* forgetting factor
+    aux_batch: Any = dataclasses.field(default=None, compare=False)
 
     @property
     def n_honest(self) -> int:
@@ -88,12 +105,14 @@ class AggSpec:
         """Resolve this spec's GAR through the registry.
 
         Args:
-          (none) — reads ``gar`` and ``history_window``.
+          (none) — reads ``gar``, ``history_window`` and the
+          ``rep_lr`` / ``rep_decay`` reputation schedule.
 
         Returns:
           The resolved ``AggregatorRule``.
         """
-        return resolve_rule(self.gar, history_window=self.history_window)
+        return resolve_rule(self.gar, history_window=self.history_window,
+                            rep_lr=self.rep_lr, rep_decay=self.rep_decay)
 
     def validate(self, n_workers: Optional[int] = None, *,
                  distributed: bool = False) -> None:

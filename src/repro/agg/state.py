@@ -22,13 +22,19 @@ so it jits, shards, and donates like any other carry:
   ``versions`` / ``arrival_step`` arrays.  The ``stale-<base>`` rules
   (``repro.agg.staleness``) read staleness as ``step - bus.versions``;
   the async step owns the slot writes.
+* ``reputation`` — the ``reputation-<base>`` rules' per-worker fp32
+  scores in ``[0, 1]`` (``repro.agg.reputation``), initialized to
+  **ones** (everyone fully trusted — uniform reputation reproduces the
+  base rule bitwise).  Training states carry ``(n,)``; the serving
+  layer allocates per-slot ``(n, batch)`` columns via ``rep_dims`` so
+  slot reuse can reset one request's column without touching the rest.
 
 Unused fields stay ``()`` (an empty pytree), so a rule only allocates
 the buffers its ``state_fields`` declare.
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,16 +51,19 @@ class AggState(NamedTuple):
     history:  sliding-window gradient buffer(s), or ``()``.
     center:   momentum-carried center leaves, or ``()``.
     bus:      async runtime's ``GradientBus`` slots + versions, or ``()``.
+    reputation: per-worker fp32 trust scores in [0, 1], or ``()``.
     """
 
     step: jnp.ndarray
     history: Any = ()
     center: Any = ()
     bus: Any = ()
+    reputation: Any = ()
 
 
 def init_state(rule: AggregatorRule, template: Any,
-               flat: "bool | None" = None) -> AggState:
+               flat: "bool | None" = None, *,
+               rep_dims: Tuple[int, ...] = ()) -> AggState:
     """Zero-initialized :class:`AggState` for one rule and gradient shape.
 
     Args:
@@ -72,14 +81,21 @@ def init_state(rule: AggregatorRule, template: Any,
         Pass ``flat=False`` explicitly when feeding a *bare-array
         pytree* to ``distributed_aggregate`` (which does so itself when
         it self-initializes).
+      rep_dims: extra trailing dimensions of the ``reputation`` buffer
+        beyond the leading worker axis — ``()`` gives the training
+        layout ``(n,)``; the serving layer passes ``(batch,)`` for
+        per-slot ``(n, batch)`` reputation columns
+        (``repro.dist.serve_robust.init_ensemble_state``).
 
     Returns:
       An :class:`AggState` with ``step = 0`` and fp32 zero buffers for
       exactly the fields in ``rule.state_fields``; a stateless rule gets
-      ``AggState(0, (), (), ())``.  A rule declaring ``"bus"`` gets a
-      zeroed ``GradientBus`` whose slots mirror the template's own
+      ``AggState(0, (), (), (), ())``.  A rule declaring ``"bus"`` gets
+      a zeroed ``GradientBus`` whose slots mirror the template's own
       structure and dtypes (rules only read ``bus.versions``; the async
-      step owns the slots).
+      step owns the slots); a rule declaring ``"reputation"`` gets a
+      **ones** buffer (neutral trust — uniform reputation reproduces
+      the base rule bitwise).
     """
     leaves = jax.tree_util.tree_leaves(template)
     dense = (flat if flat is not None
@@ -87,6 +103,7 @@ def init_state(rule: AggregatorRule, template: Any,
     history: Any = ()
     center: Any = ()
     bus: Any = ()
+    reputation: Any = ()
     if "history" in rule.state_fields:
         w = rule.history_window
         if not w or w < 1:
@@ -102,5 +119,8 @@ def init_state(rule: AggregatorRule, template: Any,
     if "bus" in rule.state_fields:
         from repro.dist.async_train import init_bus
         bus = init_bus(template)
+    if "reputation" in rule.state_fields:
+        n = leaves[0].shape[0]
+        reputation = jnp.ones((n,) + tuple(rep_dims), jnp.float32)
     return AggState(step=jnp.zeros((), jnp.int32), history=history,
-                    center=center, bus=bus)
+                    center=center, bus=bus, reputation=reputation)

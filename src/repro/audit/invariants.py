@@ -14,10 +14,13 @@ The output invariants are *declared by the rules themselves* — each
 :class:`~repro.agg.registry.AggregatorRule` carries an ``invariants``
 tuple — and are asserted relative to the **effective stack** the rule
 body consumed: ``stale-*`` composites reweight the workers before the
-base rule runs and ``buffered-*`` composites smooth them through the
-window means, so :func:`effective_stack` recomputes exactly that
-transformation from the carried ``AggState``.  See docs/audit.md for the
-full catalogue and the rationale of each entry.
+base rule runs, ``reputation-*`` composites blend each row toward the
+trusted weighted mean, and ``buffered-*`` composites smooth them through
+the window means, so :func:`effective_stack` (via
+:func:`prewindow_stack`, which replays the per-step reweightings in
+wrapper order) recomputes exactly that transformation from the carried
+``AggState``.  See docs/audit.md for the full catalogue and the
+rationale of each entry.
 """
 from __future__ import annotations
 
@@ -32,7 +35,7 @@ from repro.agg.state import AggState
 
 __all__ = ["check_convex", "check_finite", "check_hull",
            "check_quorum_contract", "check_rule_output", "check_trimmed",
-           "effective_stack"]
+           "effective_stack", "prewindow_stack"]
 
 #: relative tolerance of the hull / convex checks (fp32 arithmetic)
 _RTOL = 1e-4
@@ -40,6 +43,50 @@ _RTOL = 1e-4
 
 def _tol(stack: np.ndarray) -> float:
     return _RTOL * max(float(np.max(np.abs(stack))), 1.0)
+
+
+def prewindow_stack(rule: AggregatorRule, grads: jnp.ndarray,
+                    state: Optional[AggState]) -> np.ndarray:
+    """The per-step reweighted stack, *before* any history window-mean.
+
+    Walks ``rule.state_fields`` **in order** — outermost wrapper first,
+    the order composites prepend themselves in — and replays each
+    stack-reweighting transformation from the *pre-call* state:
+
+    * ``"reputation"`` (``reputation-*``): the reputation blend
+      ``w_i * g_i + (1 - w_i) * g_w`` with weights
+      ``reputation_scale(state)`` (see ``repro.agg.reputation``);
+    * ``"bus"`` (``stale-*``): multiply by ``stale_scale(state)`` —
+      recomputed here from the carried bus.
+
+    ``"history"`` is deliberately *not* applied — the window mean needs
+    the caller-tracked history of these per-step stacks, which is
+    exactly what the sweep driver feeds back (one entry per step is this
+    function's output; :func:`effective_stack` folds the mean).
+
+    Args:
+      rule: the resolved rule under audit.
+      grads: raw ``(n, d)`` worker stack fed to ``rule.dense_fn``.
+      state: the ``AggState`` passed *into* the call (``None`` for
+        stateless rules).
+
+    Returns:
+      ``(n, d)`` float32 numpy stack after every per-step reweighting.
+    """
+    eff = np.asarray(grads, np.float32)
+    if state is None:
+        return eff
+    for field in rule.state_fields:
+        if field == "reputation":
+            from repro.agg.reputation import blend_stack, reputation_scale
+            w = reputation_scale(state)
+            eff = np.asarray(blend_stack(jnp.asarray(eff), w), np.float32)
+        elif field == "bus":
+            from repro.agg.staleness import stale_scale
+            weight = "exp" if "-exp-" in rule.name else "inv"
+            scale = np.asarray(stale_scale(state, weight), np.float32)
+            eff = eff * scale[:, None]
+    return eff
 
 
 def effective_stack(rule: AggregatorRule, grads: jnp.ndarray,
@@ -51,12 +98,12 @@ def effective_stack(rule: AggregatorRule, grads: jnp.ndarray,
     Composites transform the raw worker stack before their base rule
     sees it; the declared output invariants hold relative to the
     transformed stack.  This helper replays the transformation from the
-    *pre-call* state, independently of the rule code it audits:
-
-    * ``stale-*`` (``"bus"`` in ``state_fields``): multiply by
-      ``stale_scale(state)`` — recomputed here from the carried bus;
-    * ``buffered-*`` (``"history"``): the per-worker window means over
-      the caller-tracked ``history`` of (already reweighted) stacks.
+    *pre-call* state, independently of the rule code it audits: first
+    the per-step reweightings of :func:`prewindow_stack` (reputation
+    blend, staleness scale — applied in ``state_fields`` order,
+    outermost wrapper first), then for ``buffered-*`` (``"history"``)
+    the per-worker window means over the caller-tracked ``history`` of
+    (already reweighted) stacks.
 
     Args:
       rule: the resolved rule under audit.
@@ -65,18 +112,14 @@ def effective_stack(rule: AggregatorRule, grads: jnp.ndarray,
         stateless rules).
       history: for history-buffered rules, the effective inputs of the
         last calls **including this one**, oldest first (the sweep
-        driver tracks them; at most ``rule.history_window`` entries are
-        used).  ``None`` treats this as the first step.
+        driver tracks them — each entry a :func:`prewindow_stack`
+        output; at most ``rule.history_window`` entries are used).
+        ``None`` treats this as the first step.
 
     Returns:
       ``(n, d)`` float32 numpy stack the invariants are checked against.
     """
-    eff = np.asarray(grads, np.float32)
-    if "bus" in rule.state_fields and state is not None:
-        from repro.agg.staleness import stale_scale
-        weight = "exp" if "-exp-" in rule.name else "inv"
-        scale = np.asarray(stale_scale(state, weight), np.float32)
-        eff = eff * scale[:, None]
+    eff = prewindow_stack(rule, grads, state)
     if "history" in rule.state_fields:
         w = rule.history_window or 1
         window = list(history or [])[-w:] or [eff]

@@ -1,10 +1,11 @@
 """The adversarial corner sweep: every rule x attack x (n, f, tau) grid.
 
 One driver walks **every** rule the registry resolves — the paper's base
-rules, the ``bulyan-*`` / ``buffered-*`` / ``stale-*`` / ``fused-*``
-composite families, ``centered_clip_momentum`` — against every registered attack
-over a grid of worker counts, Byzantine bounds, staleness patterns and
-delay schedules, and asserts the shared contracts at each corner:
+rules, the ``bulyan-*`` / ``buffered-*`` / ``stale-*`` / ``fused-*`` /
+``reputation-*`` composite families, ``centered_clip_momentum`` —
+against every registered attack over a grid of worker counts, Byzantine
+bounds, staleness patterns and delay schedules, and asserts the shared
+contracts at each corner:
 
 * **output invariants** — each rule's declared ``invariants`` tuple,
   checked against the effective stack it consumed
@@ -18,6 +19,11 @@ delay schedules, and asserts the shared contracts at each corner:
 * **staleness bound** — simulated delivery under every (tau, schedule)
   corner keeps ``staleness_excess`` at zero, and ``tau = 0`` delivers
   everyone every step;
+* **arbitrary-f regime** — at ``f >= n/2`` every quorum-bound roster
+  rule must *refuse to run* with the one canonical quorum message,
+  while every ``reputation-*`` composite (whose ``min_n`` is constant
+  in f) runs, emits a finite aggregate, and keeps its reputation
+  weights inside ``[0, 1]``;
 * **fp32 accumulation** — the Pallas kernels match their fp32 oracles
   on bf16 inputs (``repro.kernels.probes``, the fused megakernel
   included), and the sharded engine's bf16 tree path — under the
@@ -48,8 +54,9 @@ import numpy as np
 
 from repro.agg.registry import resolve_rule, rule_names
 from repro.agg.state import init_state
-from repro.audit.invariants import (check_quorum_contract,
-                                    check_rule_output, effective_stack)
+from repro.audit.invariants import (check_finite, check_quorum_contract,
+                                    check_rule_output, effective_stack,
+                                    prewindow_stack)
 from repro.core.attacks import get_attack
 
 __all__ = ["AuditReport", "SweepConfig", "audit_roster", "main",
@@ -166,12 +173,16 @@ def audit_roster() -> List[str]:
     Returns:
       Sorted rule names: all statically registered rules plus one or
       more representatives of each composite family (``bulyan-*``,
-      ``buffered-*``, ``stale-*``, ``stale-exp-*``, ``fused-*`` and
-      their nestings) — every name resolves through
+      ``buffered-*``, ``stale-*``, ``stale-exp-*``, ``fused-*``,
+      ``reputation-*`` and their nestings) — every name resolves through
       ``repro.agg.resolve_rule``.  The speculative serving section
       audits the roster's serving-capable subset (stateless rules with
       a tree path — what ``aggregate_logits`` can drive) as robust
-      verifiers of the speculative decode mode.
+      verifiers of the speculative decode mode; the arbitrary-f section
+      splits the roster into quorum-bound rules (must refuse at
+      ``f >= n/2``) and ``reputation-*`` composites (must run there —
+      their declared ``invariants`` hold relative to the blended stack,
+      see ``repro.audit.invariants.prewindow_stack``).
     """
     from repro.agg.fused import FUSED_BASES
     bases = rule_names()
@@ -184,6 +195,10 @@ def audit_roster() -> List[str]:
                "stale-exp-krum", "stale-exp-cwmed"]
     roster += [f"fused-{b}" for b in FUSED_BASES]
     roster += ["stale-fused-krum"]
+    roster += [f"reputation-{b}" for b in bases]
+    roster += ["reputation-bulyan-krum", "reputation-buffered-cwmed",
+               "reputation-stale-krum", "stale-reputation-krum",
+               "reputation-fused-krum"]
     return sorted(roster)
 
 
@@ -239,13 +254,7 @@ def _case_violations(name: str, attack: str, n: int, f: int,
         else:
             res = rule.dense_fn(full, f)
             new_state = state
-        if "bus" in rule.state_fields:
-            from repro.agg.staleness import stale_scale
-            weight = "exp" if "-exp-" in name else "inv"
-            scale = np.asarray(stale_scale(state, weight), np.float32)
-            history.append(np.asarray(full, np.float32) * scale[:, None])
-        else:
-            history.append(np.asarray(full, np.float32))
+        history.append(prewindow_stack(rule, full, state))
         eff = effective_stack(rule, full, state, history=history)
         out += check_rule_output(rule, res.gradient, res.selected, eff, f,
                                  label)
@@ -378,6 +387,63 @@ def _staleness_section(cfg: SweepConfig, report: AuditReport) -> None:
                         f"tau={tau}/{schedule}: staleness bound exceeded "
                         f"at step {t} by {excess.tolist()}")
             report.add("staleness", steps, violations)
+
+
+def _arbitrary_f_section(cfg: SweepConfig, report: AuditReport) -> None:
+    """f >= n/2: quorum rules refuse canonically, reputation-* runs.
+
+    The regime the paper's worker-count arithmetic cannot express: at
+    ``f = n/2`` and ``f = 3n/4`` every roster rule whose ``min_n(f)``
+    exceeds the committee must raise the one canonical quorum
+    ``ValueError`` (silently running *weakened* is the failure mode this
+    section exists to catch), while every ``reputation-*`` composite —
+    ``min_n`` constant in f — must run, emit a finite aggregate, and
+    keep its updated reputation weights inside ``[0, 1]``.
+    """
+    from repro.agg.specs import check_quorum
+    key = jax.random.PRNGKey(cfg.seed + 5)
+    n = 8
+    for f in (n // 2, 3 * n // 4):
+        for name in audit_roster():
+            rule = resolve_rule(name)
+            need = rule.min_n(f)
+            violations: List[str] = []
+            label = f"arbitrary-f/{name}/n{n}/f{f}"
+            if name.startswith("reputation-") and need > n:
+                violations.append(
+                    f"{label}: reputation composite lost the arbitrary-f "
+                    f"contract (min_n({f}) = {need} > {n})")
+            if need > n:
+                want = f"{name} requires n >= {need} for f={f}, got n={n}"
+                try:
+                    check_quorum(name, n, f)
+                    violations.append(
+                        f"{label}: quorum-bound rule ran at f >= n/2 "
+                        f"instead of refusing (need n >= {need})")
+                except ValueError as e:
+                    if str(e) != want:
+                        violations.append(
+                            f"{label}: non-canonical refusal {e!r} "
+                            f"(want {want!r})")
+            else:
+                k = _case_key(key, "arbitraryf", name, n, f)
+                full = (jax.random.normal(k, (n, cfg.d), jnp.float32)
+                        * 0.5 + 1.0)
+                state = init_state(rule, full) if rule.stateful else None
+                if rule.stateful:
+                    res, new_state = rule.dense_fn(full, f, state)
+                else:
+                    res = rule.dense_fn(full, f)
+                    new_state = None
+                violations += check_finite(res.gradient, label)
+                if name.startswith("reputation-"):
+                    rep = np.asarray(new_state.reputation, np.float32)
+                    if (rep < 0).any() or (rep > 1).any():
+                        violations.append(
+                            f"{label}: updated reputation outside [0, 1] "
+                            f"(min {float(rep.min()):.3g}, max "
+                            f"{float(rep.max()):.3g})")
+            report.add("arbitrary-f", 1, violations)
 
 
 def _fp32_section(cfg: SweepConfig, report: AuditReport) -> None:
@@ -572,6 +638,7 @@ def run_sweep(cfg: Optional[SweepConfig] = None) -> AuditReport:
     report = AuditReport()
     _quorum_section(cfg, report)
     _identity_section(cfg, report)
+    _arbitrary_f_section(cfg, report)
     _staleness_section(cfg, report)
     _fp32_section(cfg, report)
     _invariant_section(cfg, report)

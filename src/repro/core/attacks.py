@@ -14,7 +14,12 @@ Xie et al. 2019), sign-flip, mimic, random, zero.  The asynchronous
 runtime adds two delay-exploiting adversaries — ``stale_replay`` and
 ``slow_drift`` — which additionally read ``prev`` (their own previous
 bus submissions, threaded by the async step builders; see
-``repro.dist.async_train`` and docs/async-runtime.md).
+``repro.dist.async_train`` and docs/async-runtime.md).  The reputation
+runtime (``repro.agg.reputation``, docs/reputation.md) adds
+``reputation_burn`` (build trust honestly, then spend it on sign-flipped
+ascent — step-threaded like the delay attacks) and ``colluding_majority``
+(f identical submissions a bounded distance off the honest mean — the
+arbitrary-f adversary that defeats every quorum rule at f >= n/2).
 
 All attacks have the signature::
 
@@ -319,6 +324,76 @@ def slow_drift(honest: jnp.ndarray, f: int, key=None, *,
     return jnp.where(t == 0, rec, drifted).astype(honest.dtype)
 
 
+# ---------------------------------------------------------------------------
+# reputation attacks (the arbitrary-f runtime's adversaries)
+# ---------------------------------------------------------------------------
+#
+# Adversaries of the ``reputation-*`` rules (repro.agg.reputation).  Both
+# thread ``step`` like the delay attacks thread ``prev``; called without
+# it they behave as their step-0 form.
+
+def reputation_burn(honest: jnp.ndarray, f: int, key=None, *,
+                    prev: Optional[jnp.ndarray] = None, step=None,
+                    build: int = 5, scale: float = 3.0) -> jnp.ndarray:
+    """Build trust honestly, then burn it (the reputation analogue of
+    ``stale_replay``).
+
+    For the first ``build`` steps the adversary submits the honest mean —
+    a perfect-agreement submission that drives its reputation score to
+    the maximum — then switches to ``-scale * mean``, spending the
+    accumulated trust on sign-flipped ascent.  Against a reputation rule
+    the EMA must *monotonically* burn the attacker's score back down
+    after the flip (pinned by ``tests/test_reputation.py``); against a
+    stateless rule the attack degenerates to delayed ``signflip``.
+    ``prev`` is accepted for signature parity with the delay attacks but
+    unused — the burn schedule is a pure function of ``step``."""
+    del prev  # signature parity with the delay-exploiting attacks
+    mean = jnp.mean(honest, axis=0)
+    t = jnp.asarray(step if step is not None else 0, jnp.int32)
+    byz = jnp.where(t < build, mean, -scale * mean)
+    return jnp.repeat(byz[None, :], f, axis=0)
+
+
+def colluding_majority(honest: jnp.ndarray, f: int, key=None, *,
+                       eps: float = 4.0,
+                       direction: str = "random") -> jnp.ndarray:
+    """f identical colluders a bounded distance off the honest mean.
+
+    The arbitrary-f adversary: all ``f`` Byzantine workers submit the
+    *same* point ``mean + eps * delta_bar * u`` (``u`` a unit
+    direction).  At ``f >= n/2`` the colluding cluster is the tightest
+    neighborhood in the stack, so every distance-based selection rule
+    whose quorum was (wrongly) declared satisfied picks a colluder, and
+    coordinate-wise rules place the median inside the cluster — only
+    auxiliary-batch reputation scoring (``AggSpec(aux_batch=...)``)
+    recovers, since agreement with the clean gradient is the one signal
+    the colluders cannot vote on.  ``eps`` scales the offset in units
+    of the honest spread (§B.1 delta_bar), keeping each colluder
+    individually plausible.
+
+    ``direction`` picks ``u`` (mirroring ``omniscient_linf``):
+    ``"random"`` draws a fresh unit vector from ``key`` — in high
+    dimension nearly orthogonal to the honest mean, so the cluster
+    drags the aggregate sideways; ``"anti"`` sets ``u = -mean/|mean|``,
+    the descent-reversing worst case that cosine-based reputation
+    scoring punishes hardest."""
+    d = honest.shape[1]
+    mean = jnp.mean(honest, axis=0)
+    if direction == "anti":
+        u = -(mean / (jnp.linalg.norm(mean) + 1e-12))
+    elif direction == "random":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        u = jax.random.normal(key, (d,), jnp.float32)
+        u = (u / (jnp.linalg.norm(u) + 1e-12)).astype(honest.dtype)
+    else:
+        raise ValueError(
+            f"colluding_majority direction must be 'random' or 'anti', "
+            f"got {direction!r}")
+    byz = mean + eps * _delta_bar(honest) * u
+    return jnp.repeat(byz[None, :], f, axis=0)
+
+
 ATTACKS = {
     "none": None,
     "omniscient_lp": omniscient_lp,
@@ -331,6 +406,8 @@ ATTACKS = {
     "mimic": mimic,
     "stale_replay": stale_replay,
     "slow_drift": slow_drift,
+    "reputation_burn": reputation_burn,
+    "colluding_majority": colluding_majority,
 }
 
 

@@ -304,7 +304,9 @@ def make_async_train_step(cfg, spec: AggSpec, optimizer: Optimizer,
     """
     loss_fn = make_loss_fn(cfg, impl)
     vg = jax.value_and_grad(loss_fn)
-    stateful = spec.rule().stateful
+    rule = spec.rule()
+    stateful = rule.stateful
+    reputed = "reputation" in rule.state_fields
 
     def step(params, opt_state, batch, agg_state):
         tokens, labels = batch["tokens"], batch["labels"]
@@ -350,12 +352,41 @@ def make_async_train_step(cfg, spec: AggSpec, optimizer: Optimizer,
             bus.grads, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
             state=state_in if stateful else None,
-            history_window=spec.history_window)
+            history_window=spec.history_window,
+            rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
         if stateful:
             agg, res, new_state = out
         else:
             agg, res = out
             new_state = state_in._replace(step=t + 1)
+
+        step_scale = jnp.ones((), jnp.float32)
+        if reputed:
+            from repro.agg.reputation import (
+                DEFAULT_REP_DECAY, DEFAULT_REP_LR, step_size_multiplier,
+                tree_reputation_scores, update_reputation)
+            if spec.aux_batch is not None:
+                # score the *slot* stack (what was aggregated) against
+                # the clean auxiliary gradient — ByGARS proper
+                aux = tuple(spec.aux_batch)
+                _, clean = vg(params, *aux)
+                scores = tree_reputation_scores(
+                    jax.tree_util.tree_leaves(bus.grads),
+                    jax.tree_util.tree_leaves(clean))
+                lr = (DEFAULT_REP_LR if spec.rep_lr is None
+                      else spec.rep_lr)
+                decay = (DEFAULT_REP_DECAY if spec.rep_decay is None
+                         else spec.rep_decay)
+                new_state = new_state._replace(
+                    reputation=update_reputation(
+                        agg_state.reputation, scores, lr, decay))
+            if spec.rep_lr:
+                # the staleness-adaptive step-size tail (Alistarh et
+                # al.): carried trust shrinks the applied update
+                step_scale = step_size_multiplier(new_state)
+                agg = jax.tree_util.tree_map(
+                    lambda a: (a.astype(jnp.float32)
+                               * step_scale).astype(a.dtype), agg)
         new_params, new_opt = optimizer.update(agg, opt_state, params)
 
         honest_mean = jax.tree_util.tree_map(
@@ -376,6 +407,8 @@ def make_async_train_step(cfg, spec: AggSpec, optimizer: Optimizer,
                 staleness_excess(bus, t, tau)).astype(jnp.float32),
             "delivered": jnp.sum(deliver).astype(jnp.float32),
         }
+        if reputed:
+            metrics["step_scale"] = step_scale
         return new_params, new_opt, metrics, new_state
 
     return step

@@ -327,7 +327,9 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
                           agg_dtype: str = "native",
                           window: Optional[int] = None,
                           distance_backend: str = "auto", mesh=None,
-                          state=None, history_window: Optional[int] = None):
+                          state=None, history_window: Optional[int] = None,
+                          rep_lr: Optional[float] = None,
+                          rep_decay: Optional[float] = None):
     """Apply GAR ``gar`` across the leading worker axis of a stacked
     gradient pytree, leaf-wise (semantics contract: equals the flat core
     rule on ``stack_flatten`` of the same tree, see tests/test_dist.py).
@@ -363,6 +365,9 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
         zero-initializes one in-graph); stateless rules ignore it.
       history_window: ``buffered-*`` sliding-window length (``None`` =
         registry default).
+      rep_lr: ``reputation-*`` EMA rate (``None`` = registry default;
+        other rules ignore it — see ``repro.agg.reputation``).
+      rep_decay: ``reputation-*`` forgetting factor (same default rule).
 
     Returns:
       ``(aggregated pytree, DistAggResult)`` for stateless rules, and
@@ -375,14 +380,16 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
     from repro.agg.state import init_state
 
     n = _worker_count(tree)
-    rule = resolve_rule(gar, history_window=history_window)
+    rule = resolve_rule(gar, history_window=history_window,
+                        rep_lr=rep_lr, rep_decay=rep_decay)
     check_quorum(gar, n, f, distributed=True,
                  history_window=history_window)
     if resolve_distance_backend(distance_backend, mesh) == "fused":
         from repro.agg.fused import fused_name
         lowered = fused_name(gar)
         if lowered is not None:
-            rule = resolve_rule(lowered, history_window=history_window)
+            rule = resolve_rule(lowered, history_window=history_window,
+                                rep_lr=rep_lr, rep_decay=rep_decay)
     cdt = _compute_dtype(agg_dtype)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     out_dtypes = [leaf.dtype for leaf in leaves]
@@ -440,7 +447,7 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
                      z: Optional[float] = None, target: int = 0,
                      coord=0, margin: float = 1.0,
                      direction: str = "ones", prev: Any = None,
-                     hold: int = 0) -> Any:
+                     hold: int = 0, build: int = 5) -> Any:
     """Replace the last ``f`` worker rows of every leaf with Byzantine
     submissions computed from the first ``n - f`` (honest) rows.
 
@@ -461,13 +468,21 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
         coordinate space of the whole tree, or ``"rotate"`` / ``"top"``;
         ``direction`` is the linf attack's +-1 vector — ``"ones"`` or
         ``"anti"`` (against the sign of the honest mean), matching the
-        flat ``repro.core.attacks.omniscient_linf``.
+        flat ``repro.core.attacks.omniscient_linf``; for
+        ``colluding_majority`` it picks the cluster offset instead
+        (``"anti"`` = negated honest mean, anything else = random),
+        matching the flat attack's ``direction``.
       prev/hold: the delay-exploiting attacks' parameters —
         ``stale_replay`` and ``slow_drift`` read ``prev``, a pytree of
         ``(f, *dims)`` leaves holding the adversary's previous bus
         submissions (threaded by the async step builders; ``None``
         degenerates both to mimic-the-mean), and ``stale_replay``
         re-records every ``hold`` steps (0 = freeze forever).
+      build: the ``reputation_burn`` attack's build phase length —
+        honest-mean submissions for ``step < build``, then
+        ``-scale * mean`` (``colluding_majority`` instead reads ``eps``
+        as its offset in delta_bar units; both match the flat
+        ``repro.core.attacks`` forms).
 
     Returns:
       The tree with the last f rows of every leaf replaced, dtypes and
@@ -544,6 +559,29 @@ def inject_byzantine(tree: Any, f: int, attack: str, key=None, *,
                     drifted = p.astype(jnp.float32) + eps * db * e[None]
                     byz.append(jnp.where(t == 0, _broadcast(m, l),
                                          drifted).astype(l.dtype))
+    elif attack == "reputation_burn":
+        s = 3.0 if scale is None else scale
+        t = jnp.asarray(step if step is not None else 0, jnp.int32)
+        byz = [_broadcast(jnp.where(t < build, 1.0, -s)
+                          * jnp.mean(h.astype(jnp.float32), axis=0), l)
+               for h, l in zip(honest, leaves)]
+    elif attack == "colluding_majority":
+        # one unit direction over the concatenated coordinate space,
+        # normalized by the global norm: random per-leaf gaussians, or
+        # (direction="anti") the negated honest mean — the
+        # descent-reversing worst case, as in the flat attack
+        db = _tree_delta_bar(honest)
+        if direction == "anti":
+            dirs = [-jnp.mean(h.astype(jnp.float32), axis=0)
+                    for h in honest]
+        else:
+            dirs = [jax.random.normal(jax.random.fold_in(key, j),
+                                      l.shape[1:], jnp.float32)
+                    for j, l in enumerate(leaves)]
+        norm = jnp.sqrt(sum(jnp.sum(e * e) for e in dirs)) + 1e-12
+        byz = [_broadcast(jnp.mean(h.astype(jnp.float32), axis=0)
+                          + eps * db * e / norm, l)
+               for h, e, l in zip(honest, dirs, leaves)]
     elif attack in ("omniscient_linf", "omniscient_lp"):
         d = _tree_coord_count(leaves)
         db = _tree_delta_bar(honest)

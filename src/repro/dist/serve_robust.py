@@ -172,7 +172,9 @@ def aggregate_logits(logits: jnp.ndarray, f: int, gar: str, *,
                      agg_dtype: str = "native",
                      distance_backend: str = "auto", mesh=None,
                      state: Optional[AggState] = None,
-                     history_window: Optional[int] = None):
+                     history_window: Optional[int] = None,
+                     rep_lr: Optional[float] = None,
+                     rep_decay: Optional[float] = None):
     """Aggregate a replica-stacked logits tensor through the GAR registry.
 
     The stack is wrapped in a single-leaf tree and handed to
@@ -196,6 +198,9 @@ def aggregate_logits(logits: jnp.ndarray, f: int, gar: str, *,
       state: carried ``AggState`` for stateful rules (``None``
         zero-initializes one in-graph); stateless rules ignore it.
       history_window: ``buffered-*`` window length (``None`` = default).
+      rep_lr: ``reputation-*`` EMA rate (``None`` = registry default;
+        ignored by other rules — see ``repro.agg.reputation``).
+      rep_decay: ``reputation-*`` forgetting factor (same default rule).
 
     Returns:
       ``(aggregated logits, DistAggResult)`` for stateless rules and
@@ -206,7 +211,7 @@ def aggregate_logits(logits: jnp.ndarray, f: int, gar: str, *,
     out = distributed_aggregate(
         {"logits": logits}, f, gar, agg_dtype=agg_dtype,
         distance_backend=distance_backend, mesh=mesh, state=state,
-        history_window=history_window)
+        history_window=history_window, rep_lr=rep_lr, rep_decay=rep_decay)
     agg = out[0]["logits"]
     if len(out) == 3:
         return agg, out[1], out[2]
@@ -220,8 +225,12 @@ def init_ensemble_state(spec: AggSpec, n_replicas: int, batch: int,
     The state template is the ``(n_replicas, batch, vocab)`` logits stack
     the decode step aggregates, so window buffers come out as
     ``(W, n_replicas, batch, vocab)`` — one history of the full slot
-    batch, carried across tokens.  Composes with ``jax.eval_shape`` (only
-    shapes are read).
+    batch, carried across tokens.  ``reputation-*`` rules get a
+    **per-slot** ``(n_replicas, batch)`` trust layout (``rep_dims``), so
+    each request's decode stream earns its own replica scores and slot
+    reuse can reset one column (:func:`reset_slot_state`) without
+    touching concurrent requests.  Composes with ``jax.eval_shape``
+    (only shapes are read).
 
     Args:
       spec: the serving ``AggSpec`` (``gar`` / ``history_window`` select
@@ -239,7 +248,7 @@ def init_ensemble_state(spec: AggSpec, n_replicas: int, batch: int,
         return None
     template = {"logits": jax.ShapeDtypeStruct(
         (n_replicas, batch, vocab), jnp.float32)}
-    return init_state(rule, template, flat=False)
+    return init_state(rule, template, flat=False, rep_dims=(batch,))
 
 
 def reset_slot_state(state: Optional[AggState],
@@ -262,8 +271,11 @@ def reset_slot_state(state: Optional[AggState],
       slot: batch-slot index being (re)admitted.
 
     Returns:
-      The state with ``history[:, :, slot]`` / ``center[slot]`` zeroed,
-      or ``None`` when ``state`` is ``None``.
+      The state with ``history[:, :, slot]`` / ``center[slot]`` zeroed
+      and the slot's ``reputation[:, slot]`` column restored to **ones**
+      (the neutral full-trust init — a new request must not inherit, nor
+      be punished by, the previous occupant's replica scores), or
+      ``None`` when ``state`` is ``None``.
     """
     if state is None:
         return None
@@ -271,7 +283,11 @@ def reset_slot_state(state: Optional[AggState],
         if state.history != () else ()
     center = tuple(c.at[slot].set(0.0) for c in state.center) \
         if state.center != () else ()
-    return state._replace(history=history, center=center)
+    reputation = state.reputation
+    if not isinstance(reputation, tuple) and reputation.ndim == 2:
+        reputation = reputation.at[:, slot].set(1.0)
+    return state._replace(history=history, center=center,
+                          reputation=reputation)
 
 
 # ---------------------------------------------------------------------------
@@ -332,7 +348,8 @@ def make_robust_prefill_step(cfg: ModelConfig, spec: AggSpec,
         out = aggregate_logits(
             stack, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
-            history_window=spec.history_window)
+            history_window=spec.history_window,
+            rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
         return out[0], caches, out[1]
 
     return prefill_step
@@ -381,7 +398,8 @@ def make_robust_serve_step(cfg: ModelConfig, spec: AggSpec,
         out = aggregate_logits(
             stack, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
-            state=agg_state, history_window=spec.history_window)
+            state=agg_state, history_window=spec.history_window,
+            rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
         new_state = out[2] if stateful else None
         return out[0], new_cache, out[1], new_state
 
@@ -438,7 +456,8 @@ def make_robust_verify_step(cfg: ModelConfig, spec: AggSpec,
             slice_nbv, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
             state=state if stateful else None,
-            history_window=spec.history_window)
+            history_window=spec.history_window,
+            rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
         new_state = out[2] if stateful else state
         return new_state, (out[0], out[1])
 

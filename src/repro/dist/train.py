@@ -96,11 +96,15 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
 
     Stateless GARs get the historic signature ``step(params, opt_state,
     batch) -> (params, opt_state, metrics)``; when ``spec.gar`` resolves
-    to a stateful rule (``buffered-*`` / ``centered_clip_momentum``) the
-    step becomes ``step(params, opt_state, batch, agg_state) ->
-    (params, opt_state, metrics, agg_state)`` with the ``AggState``
-    carried by the caller (see ``init_agg_state``) — stateless runs pay
-    nothing.
+    to a stateful rule (``buffered-*`` / ``centered_clip_momentum`` /
+    ``reputation-*``) the step becomes ``step(params, opt_state, batch,
+    agg_state) -> (params, opt_state, metrics, agg_state)`` with the
+    ``AggState`` carried by the caller (see ``init_agg_state``) —
+    stateless runs pay nothing.  ``reputation-*`` runs additionally
+    honor ``spec.aux_batch`` (clean-batch ByGARS scoring overrides the
+    agreement update) and a set ``spec.rep_lr`` (the aggregate is scaled
+    by ``step_size_multiplier`` before the optimizer — reported as
+    ``metrics["step_scale"]``).
 
     batch: ``{"tokens", "labels"[, "extra"]}`` with a leading worker axis
     ``(n_workers, per_worker_batch, ...)`` on every entry.  All n workers
@@ -115,7 +119,9 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
     """
     loss_fn = make_loss_fn(cfg, impl)
     vg = jax.value_and_grad(loss_fn)
-    stateful = spec.rule().stateful
+    rule = spec.rule()
+    stateful = rule.stateful
+    reputed = "reputation" in rule.state_fields
 
     def run_step(params, opt_state, batch, agg_state):
         tokens, labels = batch["tokens"], batch["labels"]
@@ -143,9 +149,40 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
         out = distributed_aggregate(
             grads, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
-            state=agg_state, history_window=spec.history_window)
+            state=agg_state, history_window=spec.history_window,
+            rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
         agg, res = out[0], out[1]
         new_agg_state = out[2] if stateful else None
+
+        step_scale = jnp.ones((), jnp.float32)
+        if reputed:
+            from repro.agg.reputation import (
+                DEFAULT_REP_DECAY, DEFAULT_REP_LR, step_size_multiplier,
+                tree_reputation_scores, update_reputation)
+            if spec.aux_batch is not None:
+                # ByGARS proper: score raw submissions against the clean
+                # auxiliary gradient, overriding the rule's own
+                # agreement-with-the-aggregate update — the only signal
+                # a colluding majority cannot vote on
+                aux = tuple(spec.aux_batch)
+                _, clean = vg(params, *aux)
+                scores = tree_reputation_scores(
+                    jax.tree_util.tree_leaves(grads),
+                    jax.tree_util.tree_leaves(clean))
+                lr = (DEFAULT_REP_LR if spec.rep_lr is None
+                      else spec.rep_lr)
+                decay = (DEFAULT_REP_DECAY if spec.rep_decay is None
+                         else spec.rep_decay)
+                new_agg_state = new_agg_state._replace(
+                    reputation=update_reputation(
+                        agg_state.reputation, scores, lr, decay))
+            if spec.rep_lr:
+                # staleness-adaptive step size (Alistarh et al.): the
+                # same carried trust scales the update magnitude
+                step_scale = step_size_multiplier(new_agg_state)
+                agg = jax.tree_util.tree_map(
+                    lambda a: (a.astype(jnp.float32)
+                               * step_scale).astype(a.dtype), agg)
         new_params, new_state = optimizer.update(agg, opt_state, params)
 
         honest_mean = jax.tree_util.tree_map(
@@ -159,6 +196,8 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
             "byz_weight": (jnp.sum(res.selected[n_h:]) if f > 0
                            else jnp.zeros((), jnp.float32)),
         }
+        if reputed:
+            metrics["step_scale"] = step_scale
         return new_params, new_state, metrics, new_agg_state
 
     if stateful:

@@ -126,6 +126,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             optimizer_name: str = "momentum", moe_impl: Optional[str] = None,
             param_dtype: Optional[str] = None, agg_dtype: str = "native",
             distance_backend: str = "auto", unroll: bool = False,
+            rep_lr: Optional[float] = None,
             async_tau: Optional[int] = None, async_schedule: str = "fixed",
             attn_shard: Optional[str] = None,
             logits_dtype: Optional[str] = None,
@@ -203,10 +204,13 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             spec = DistByzantineSpec(f=3, gar=gar, attack=attack,
                                      agg_dtype=agg_dtype,
                                      distance_backend=distance_backend,
+                                     rep_lr=rep_lr,
                                      async_tau=async_tau,
                                      async_schedule=async_schedule)
             record.update(async_tau=async_tau,
                           async_schedule=async_schedule)
+            if rep_lr is not None:
+                record.update(rep_lr=rep_lr)
             step = make_async_train_step(cfg, spec, opt, impl=impl,
                                          mesh=mesh)
             n_workers = inputs["tokens"].shape[0]
@@ -220,7 +224,10 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             opt_state, opt_sh = S.opt_specs(params, opt, mesh)
             spec = DistByzantineSpec(f=3, gar=gar, attack=attack,
                                      agg_dtype=agg_dtype,
-                                     distance_backend=distance_backend)
+                                     distance_backend=distance_backend,
+                                     rep_lr=rep_lr)
+            if rep_lr is not None:
+                record.update(rep_lr=rep_lr)
             step = make_train_step(cfg, spec, opt, impl=impl, mesh=mesh)
             if spec.rule().stateful:
                 # abstract AggState: eval_shape keeps the (W, n, ...)
@@ -366,6 +373,10 @@ def main() -> None:
                          "fused = single-sweep megakernel, rules lowered "
                          "onto their fused-<base> composites; "
                          "auto = pallas on TPU, xla elsewhere)")
+    ap.add_argument("--rep-lr", type=float, default=None,
+                    help="reputation EMA rate for --gar reputation-<base> "
+                         "(truthy values also switch on the reputation-"
+                         "scaled step size; see repro.agg.reputation)")
     ap.add_argument("--async-tau", type=int, default=None,
                     help="lower the asynchronous bounded-staleness train "
                          "step instead of the synchronous one (train "
@@ -419,6 +430,7 @@ def main() -> None:
                   impl=args.impl, moe_impl=args.moe_impl,
                   param_dtype=args.param_dtype, agg_dtype=args.agg_dtype,
                   distance_backend=args.distance_backend,
+                  rep_lr=args.rep_lr,
                   async_tau=args.async_tau,
                   async_schedule=args.async_schedule,
                   unroll=args.unroll, attn_shard=args.attn_shard,

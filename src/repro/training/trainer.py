@@ -34,6 +34,9 @@ import jax.numpy as jnp
 
 from repro.agg.specs import AggSpec
 from repro.agg.state import AggState, init_state
+from repro.agg.reputation import (DEFAULT_REP_DECAY, DEFAULT_REP_LR,
+                                  reputation_scores, step_size_multiplier,
+                                  update_reputation)
 from repro.core import attacks as attacks_lib
 from repro.core import pytree as pt
 from repro.dist.async_train import (delivery_mask, init_bus, resolve_tau,
@@ -74,6 +77,16 @@ def init_flat_agg_state(spec: AggSpec, params,
     return init_state(rule, template, flat=True)
 
 
+def _flat_grad(grad_fn: Callable, params, batch) -> jnp.ndarray:
+    """Flat ``(d,)`` gradient of one (clean auxiliary) batch, in the
+    exact coordinate order of ``pt.stack_flatten`` (the scoring target
+    must index the same space as the worker rows)."""
+    clean = grad_fn(params, batch[0], batch[1])
+    stacked = jax.tree_util.tree_map(lambda l: l[None], clean)
+    flat, _ = pt.stack_flatten(stacked)
+    return flat[0]
+
+
 def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
                         spec: ByzantineSpec,
                         attack_on: bool = True) -> Callable:
@@ -87,6 +100,7 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
     """
     spec.validate()
     rule = spec.rule()
+    reputed = "reputation" in rule.state_fields
     attack = attacks_lib.get_attack(spec.attack) if attack_on else None
     akw = dict(spec.attack_kwargs)
 
@@ -98,7 +112,8 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
         if attack is not None and spec.f > 0:
             kw = dict(akw)
             if attack in (attacks_lib.omniscient_lp,
-                          attacks_lib.omniscient_linf):
+                          attacks_lib.omniscient_linf,
+                          attacks_lib.reputation_burn):
                 kw.setdefault("step", opt_state["step"])
             byz = attack(flat, spec.f, key, **kw)
             full = jnp.concatenate([flat, byz], axis=0)
@@ -106,11 +121,33 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
             full = flat
         n_eff = full.shape[0]
 
+        rep_prev = agg_state.reputation if reputed else None
         if rule.stateful:
             res, agg_state = rule.dense_fn(full, spec.f_declared, agg_state)
         else:
             res = rule.dense_fn(full, spec.f_declared)
-        agg = pt.unflatten(res.gradient, ctx)
+        grad_out = res.gradient
+        step_scale = jnp.ones((), jnp.float32)
+        if reputed:
+            if spec.aux_batch is not None:
+                # ByGARS proper: re-score against the clean auxiliary
+                # gradient (the aggregate itself can be owned by a
+                # colluding majority), overriding the rule's own
+                # agreement update of this step
+                target = _flat_grad(grad_fn, params, spec.aux_batch)
+                lr = (DEFAULT_REP_LR if spec.rep_lr is None
+                      else spec.rep_lr)
+                decay = (DEFAULT_REP_DECAY if spec.rep_decay is None
+                         else spec.rep_decay)
+                agg_state = agg_state._replace(
+                    reputation=update_reputation(
+                        rep_prev, reputation_scores(full, target),
+                        lr, decay))
+            if spec.rep_lr:
+                # staleness-adaptive step size (Alistarh et al.)
+                step_scale = step_size_multiplier(agg_state)
+                grad_out = grad_out * step_scale
+        agg = pt.unflatten(grad_out, ctx)
         new_params, new_state = optimizer.update(agg, opt_state, params)
 
         honest_mean = jnp.mean(flat, axis=0)
@@ -121,6 +158,8 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
             "agg_dev": jnp.linalg.norm(res.gradient - honest_mean),
             "grad_norm": jnp.linalg.norm(res.gradient),
         }
+        if reputed:
+            metrics["step_scale"] = step_scale
         return new_params, new_state, metrics, agg_state
 
     if rule.stateful:
@@ -174,7 +213,11 @@ class ByzantineTrainer:
             fn = self._step_attacked if use_attack else self._step_clean
             if self._stateful and use_attack != self._attack_mode:
                 self._attack_mode = use_attack
-                if "history" in self._rule.state_fields:
+                # per-worker buffers are row-count-dependent: the
+                # history window *and* the (n,) reputation column must
+                # restart when the committee changes size; the
+                # row-count-independent clipping center survives
+                if {"history", "reputation"} & set(self._rule.state_fields):
                     rows = (self.spec.n_workers if use_attack
                             else self.spec.n_honest)
                     self.agg_state = init_flat_agg_state(
@@ -268,6 +311,7 @@ def make_async_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
     """
     spec.validate()
     rule = spec.rule()
+    reputed = "reputation" in rule.state_fields
     attack = attacks_lib.get_attack(spec.attack)
     akw = dict(spec.attack_kwargs)
     delay_attacks = (attacks_lib.stale_replay, attacks_lib.slow_drift)
@@ -283,7 +327,8 @@ def make_async_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
         if attacked:
             kw = dict(akw)
             if attack in (attacks_lib.omniscient_lp,
-                          attacks_lib.omniscient_linf):
+                          attacks_lib.omniscient_linf,
+                          attacks_lib.reputation_burn):
                 kw.setdefault("step", opt_state["step"])
             if attack in delay_attacks:
                 kw.setdefault("prev", agg_state.bus.grads[n_h:])
@@ -303,13 +348,32 @@ def make_async_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
         bus = update_bus(agg_state.bus, full, t, deliver)
         state_in = agg_state._replace(bus=bus)
 
+        rep_prev = agg_state.reputation if reputed else None
         if rule.stateful:
             res, new_state = rule.dense_fn(bus.grads, spec.f_declared,
                                            state_in)
         else:
             res = rule.dense_fn(bus.grads, spec.f_declared)
             new_state = state_in._replace(step=t + 1)
-        agg = pt.unflatten(res.gradient, ctx)
+        grad_out = res.gradient
+        step_scale = jnp.ones((), jnp.float32)
+        if reputed:
+            if spec.aux_batch is not None:
+                # score the slot stack (what was aggregated) against the
+                # clean auxiliary gradient — ByGARS proper
+                target = _flat_grad(grad_fn, params, spec.aux_batch)
+                lr = (DEFAULT_REP_LR if spec.rep_lr is None
+                      else spec.rep_lr)
+                decay = (DEFAULT_REP_DECAY if spec.rep_decay is None
+                         else spec.rep_decay)
+                new_state = new_state._replace(
+                    reputation=update_reputation(
+                        rep_prev, reputation_scores(bus.grads, target),
+                        lr, decay))
+            if spec.rep_lr:
+                step_scale = step_size_multiplier(new_state)
+                grad_out = grad_out * step_scale
+        agg = pt.unflatten(grad_out, ctx)
         new_params, new_opt = optimizer.update(agg, opt_state, params)
 
         honest_mean = jnp.mean(bus.grads[:n_h], axis=0)
@@ -324,6 +388,8 @@ def make_async_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
             "staleness_max": jnp.max(staleness).astype(jnp.float32),
             "delivered": jnp.sum(deliver).astype(jnp.float32),
         }
+        if reputed:
+            metrics["step_scale"] = step_scale
         return new_params, new_opt, metrics, new_state
 
     return step

@@ -37,14 +37,16 @@ class TestSweep:
         assert report.ok(), report.violations
         # every section actually ran
         assert set(report.sections) == {"invariants", "quorum",
-                                        "identity", "staleness", "fp32",
+                                        "identity", "arbitrary-f",
+                                        "staleness", "fp32",
                                         "speculative"}
 
     def test_roster_covers_every_family(self):
         roster = audit_roster()
         from repro.agg import rule_names
         assert set(rule_names()) <= set(roster)
-        for prefix in ("bulyan-", "buffered-", "stale-", "stale-exp-"):
+        for prefix in ("bulyan-", "buffered-", "stale-", "stale-exp-",
+                       "reputation-"):
             assert any(r.startswith(prefix) for r in roster), prefix
         for name in roster:
             assert resolve_rule(name).dense_fn is not None, name

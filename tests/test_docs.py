@@ -20,12 +20,13 @@ def test_front_door_exists():
     assert (REPO / "docs" / "async-runtime.md").exists()
     assert (REPO / "docs" / "audit.md").exists()
     assert (REPO / "docs" / "kernels.md").exists()
+    assert (REPO / "docs" / "reputation.md").exists()
 
 
 @pytest.mark.parametrize("doc", ["README.md", "docs/dist-runtime.md",
                                  "docs/aggregation.md", "docs/serving.md",
                                  "docs/async-runtime.md", "docs/audit.md",
-                                 "docs/kernels.md"])
+                                 "docs/kernels.md", "docs/reputation.md"])
 def test_doc_lints_clean(doc):
     errors = docs_lint.lint_file(REPO / doc)
     assert not errors, "\n".join(errors)
@@ -53,6 +54,7 @@ def test_lint_catches_bad_snippet(tmp_path):
                                  "repro.serving.speculative",
                                  "repro.dist.async_train",
                                  "repro.agg.staleness",
+                                 "repro.agg.reputation",
                                  "repro.audit", "repro.audit.invariants",
                                  "repro.audit.sweep",
                                  "repro.audit.leeway",
@@ -112,6 +114,17 @@ def test_audit_doc_covers_exported_api():
         names.update(importlib.import_module(pkg).__all__)
     missing = sorted(n for n in names if n not in text)
     assert not missing, f"docs/audit.md misses exported API: {missing}"
+
+
+def test_reputation_doc_covers_exported_api():
+    """docs/reputation.md must not drift from the reputation API surface:
+    every symbol exported by repro.agg.reputation has to be mentioned by
+    name."""
+    import importlib
+    text = (REPO / "docs" / "reputation.md").read_text()
+    names = set(importlib.import_module("repro.agg.reputation").__all__)
+    missing = sorted(n for n in names if n not in text)
+    assert not missing, f"docs/reputation.md misses exported API: {missing}"
 
 
 def test_kernels_doc_covers_exported_api():

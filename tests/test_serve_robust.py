@@ -53,7 +53,9 @@ def test_every_tree_rule_serves():
     names = [n for n in rule_names()
              if resolve_rule(n).tree_fn is not None]
     names += ["bulyan-krum", "bulyan-geomed", "buffered-cwmed",
-              "buffered-krum", "buffered-bulyan-krum"]
+              "buffered-krum", "buffered-bulyan-krum",
+              "reputation-krum", "reputation-buffered-cwmed",
+              "reputation-bulyan-krum"]
     assert "krum" in names and "centered_clip_momentum" in names
     for i, name in enumerate(names):
         rule = resolve_rule(name)
@@ -115,7 +117,7 @@ def test_poisoned_replica_rejected_end_to_end():
     honest = replicate_params(params, n, jitter=1e-3,
                               key=jax.random.PRNGKey(7))
     poisoned = poison_replicas(honest, f, "signflip", scale=10.0)
-    for gar in ("krum", "bulyan-krum"):
+    for gar in ("krum", "bulyan-krum", "reputation-krum"):
         clean = _serve(honest, cfg, gar, f, prompt)
         attacked = _serve(poisoned, cfg, gar, f, prompt)
         assert attacked == clean, gar

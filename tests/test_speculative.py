@@ -131,7 +131,9 @@ def test_verify_step_staggered_positions():
 
 @pytest.mark.parametrize("gar", ["krum", "cwmed", "bulyan-krum",
                                  "buffered-krum",
-                                 "centered_clip_momentum"])
+                                 "centered_clip_momentum",
+                                 "reputation-krum",
+                                 "reputation-buffered-krum"])
 def test_robust_verify_scan_matches_per_position_aggregation(gar):
     # the verify step's lax.scan must aggregate per position in stream
     # order, threading the AggState exactly like k per-token
@@ -188,7 +190,8 @@ def test_robust_verify_scan_matches_per_position_aggregation(gar):
 def _tree_rules():
     names = [r for r in rule_names()
              if resolve_rule(r).tree_fn is not None]
-    return names + ["bulyan-krum", "buffered-krum", "fused-krum"]
+    return names + ["bulyan-krum", "buffered-krum", "fused-krum",
+                    "reputation-krum"]
 
 
 @pytest.mark.parametrize("gar", _tree_rules())
@@ -350,6 +353,23 @@ def test_reset_slot_state_zeroes_one_column():
     assert (h[:, :, 1] == 0.0).all()
     assert (h[:, :, 0] == 1.0).all() and (h[:, :, 2] == 1.0).all()
     assert reset_slot_state(None, 0) is None
+
+
+def test_reset_slot_state_restores_reputation_column():
+    # a reused slot must not inherit the previous request's trust
+    # scores: its (n,) reputation column goes back to ones (neutral
+    # full trust), every other slot's column is untouched
+    spec = AggSpec(f=1, gar="reputation-buffered-krum")
+    state = init_ensemble_state(spec, n_replicas=5, batch=3, vocab=8)
+    assert state.reputation.shape == (5, 3)
+    state = state._replace(
+        reputation=jnp.full((5, 3), 0.25, jnp.float32),
+        history=tuple(jnp.ones_like(h) for h in state.history))
+    out = reset_slot_state(state, slot=1)
+    rep = np.asarray(out.reputation)
+    assert (rep[:, 1] == 1.0).all()
+    assert (rep[:, 0] == 0.25).all() and (rep[:, 2] == 0.25).all()
+    assert (np.asarray(out.history[0])[:, :, 1] == 0.0).all()
 
 
 # ---------------------------------------------------------------------------
