@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.agg.registry import AggregatorRule, TreeAgg, resolve_rule
 from repro.core.types import AggResult
+from repro.obs.trace import named_span
 from repro.kernels.fused_agg import (FUSED_MODES, fused_aggregate,
                                      fused_coordinate, select_weights)
 
@@ -44,7 +45,7 @@ FUSED_BASES = FUSED_MODES
 #: stateful wrapper prefixes fused_name recurses through, longest first
 #: so "stale-exp-" is not mis-split as "stale-" + "exp-..."
 _WRAPPER_PREFIXES = ("stale-exp-", "stale-inv-", "stale-", "buffered-",
-                     "reputation-")
+                     "reputation-", "obs-")
 
 
 def fused_name(gar: str) -> Optional[str]:
@@ -93,7 +94,8 @@ def make_fused(name: str) -> AggregatorRule:
     base_rule = resolve_rule(base)
 
     def dense_fn(grads: jnp.ndarray, f: int) -> AggResult:
-        agg, sel, scores = fused_aggregate(grads, f, mode=base)
+        with named_span("kernel/fused"):
+            agg, sel, scores = fused_aggregate(grads, f, mode=base)
         return AggResult(agg.astype(grads.dtype),
                          sel.astype(grads.dtype),
                          scores.astype(grads.dtype))
@@ -103,8 +105,9 @@ def make_fused(name: str) -> AggregatorRule:
         n, f = ctx.n, ctx.f
         if len(leaves) == 1:
             leaf = leaves[0]
-            agg, sel, scores = fused_aggregate(
-                leaf.reshape(n, -1), f, mode=base)
+            with named_span("kernel/fused"):
+                agg, sel, scores = fused_aggregate(
+                    leaf.reshape(n, -1), f, mode=base)
             return TreeAgg([agg.reshape(leaf.shape[1:]).astype(ctx.cdt)],
                            sel.astype(ctx.cdt), scores.astype(ctx.cdt))
         if base in ("cwmed", "trimmed_mean"):

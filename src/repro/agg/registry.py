@@ -27,7 +27,10 @@ megakernel (``repro.agg.fused`` / ``repro.kernels.fused_agg``) with the
 base's quorum and invariant contract intact, and
 ``"reputation-<base>"`` blends the worker stack by carried per-worker
 trust scores before delegating (``repro.agg.reputation`` — the
-arbitrary-f family whose quorum is constant in f).
+arbitrary-f family whose quorum is constant in f), and
+``"obs-<base>"`` records per-call aggregation forensics into the
+carried ``MetricsBuffer`` ring with the base's data path bitwise
+untouched (``repro.obs.forensics`` — the telemetry family).
 Resolved composites are cached, so repeated lookups are dict hits.
 """
 from __future__ import annotations
@@ -196,6 +199,9 @@ class AggregatorRule:
                 that legitimately break a property (e.g. the momentum-
                 carried clipping center can leave the current hull)
                 must not declare it.
+    obs_capacity: ring rows ``init_state`` allocates for the telemetry
+                ``MetricsBuffer`` — set only by the ``obs-<base>``
+                family (``repro.obs.forensics``), ``None`` otherwise.
     doc:        one-line human description.
     """
 
@@ -208,6 +214,7 @@ class AggregatorRule:
     state_fields: Tuple[str, ...] = ()
     history_window: Optional[int] = None
     invariants: Tuple[str, ...] = ("finite", "hull")
+    obs_capacity: Optional[int] = None
     doc: str = ""
 
     @property
@@ -368,6 +375,18 @@ def _reputation_rule(name: str, window: int, rep_lr: float,
                            rep_decay=rep_decay)
 
 
+def _obs_rule(name: str, window: int, rep_lr: float,
+              rep_decay: float) -> AggregatorRule:
+    from repro.obs.forensics import make_obs
+    rest = name.split("-", 1)[1]
+    base_rule = resolve_rule(rest, history_window=window, rep_lr=rep_lr,
+                             rep_decay=rep_decay)
+    if "obs" in base_rule.state_fields:
+        raise KeyError(
+            f"obs-* cannot nest another obs rule, got {rest!r}")
+    return make_obs(name, base_rule)
+
+
 def resolve_rule(name: str, history_window: Optional[int] = None,
                  rep_lr: Optional[float] = None,
                  rep_decay: Optional[float] = None) -> AggregatorRule:
@@ -380,10 +399,11 @@ def resolve_rule(name: str, history_window: Optional[int] = None,
     Args:
       name: rule name — a registered key, ``"bulyan-<base>"``,
         ``"buffered-<base>"``, ``"stale[-inv|-exp]-<base>"``,
-        ``"fused-<base>"``, or ``"reputation-<base>"`` (bases may nest,
-        e.g. ``"buffered-bulyan-krum"``, ``"stale-exp-bulyan-krum"``,
+        ``"fused-<base>"``, ``"reputation-<base>"``, or
+        ``"obs-<base>"`` (bases may nest, e.g.
+        ``"buffered-bulyan-krum"``, ``"stale-exp-bulyan-krum"``,
         ``"stale-fused-krum"``, ``"reputation-stale-krum"``,
-        ``"stale-reputation-krum"``).
+        ``"obs-stale-reputation-krum"``).
       history_window: sliding-window length for ``buffered-*`` rules
         (``None`` = :data:`DEFAULT_HISTORY_WINDOW`; ignored otherwise;
         forwarded through ``stale-*`` to a buffered base).
@@ -420,6 +440,8 @@ def resolve_rule(name: str, history_window: Optional[int] = None,
         rule = _stale_rule(name, window, lr, decay)
     elif name.startswith("reputation-"):
         rule = _reputation_rule(name, window, lr, decay)
+    elif name.startswith("obs-"):
+        rule = _obs_rule(name, window, lr, decay)
     elif name.startswith("fused-"):
         from repro.agg.fused import make_fused
         rule = make_fused(name)
@@ -427,7 +449,7 @@ def resolve_rule(name: str, history_window: Optional[int] = None,
         raise KeyError(
             f"unknown GAR {name!r}; have {sorted(RULES)} plus "
             f"'bulyan-<base>', 'buffered-<base>', 'stale-<base>', "
-            f"'fused-<base>' and 'reputation-<base>'")
+            f"'fused-<base>', 'reputation-<base>' and 'obs-<base>'")
     _COMPOSITES[key] = rule
     return rule
 

@@ -69,6 +69,12 @@ class AggSpec:
         stays sound under a colluding majority, which can own the
         aggregate itself.  Excluded from spec equality (it holds
         arrays).
+      telemetry — when True every layer resolves the GAR through
+        ``effective_gar`` (the ``obs-<gar>`` forensics wrapper,
+        ``repro.obs``), so the carried ``AggState.obs`` ring records
+        per-worker selection/suspicion diagnostics each step.  The data
+        path is bitwise-identical either way; attacks keep targeting
+        the raw ``gar`` name.
     """
 
     f: int
@@ -87,6 +93,7 @@ class AggSpec:
     draft_replica: int = 0             # ensemble row the draft model reads
     rep_lr: Optional[float] = None     # reputation-* EMA rate (None=default)
     rep_decay: Optional[float] = None  # reputation-* forgetting factor
+    telemetry: bool = False            # aggregate through obs-<gar>
     aux_batch: Any = dataclasses.field(default=None, compare=False)
 
     @property
@@ -101,17 +108,34 @@ class AggSpec:
         """The bound the master aggregates with (defaults to ``f``)."""
         return self.declared_f if self.declared_f is not None else self.f
 
+    @property
+    def effective_gar(self) -> str:
+        """The GAR name the runtime actually aggregates with.
+
+        ``gar`` itself normally; with ``telemetry=True`` it is the
+        idempotent ``obs-<gar>`` forensics wrapper (``repro.obs``),
+        whose data path is bitwise the base rule's.  Attack plumbing
+        keeps reading the raw ``gar`` — the attacker targets the
+        defense, not its instrumentation.
+        """
+        if not self.telemetry:
+            return self.gar
+        from repro.obs.forensics import obs_name
+        return obs_name(self.gar)
+
     def rule(self):
         """Resolve this spec's GAR through the registry.
 
         Args:
-          (none) — reads ``gar``, ``history_window`` and the
+          (none) — reads ``effective_gar`` (``gar``, or its ``obs-``
+          wrapper under ``telemetry=True``), ``history_window`` and the
           ``rep_lr`` / ``rep_decay`` reputation schedule.
 
         Returns:
           The resolved ``AggregatorRule``.
         """
-        return resolve_rule(self.gar, history_window=self.history_window,
+        return resolve_rule(self.effective_gar,
+                            history_window=self.history_window,
                             rep_lr=self.rep_lr, rep_decay=self.rep_decay)
 
     def validate(self, n_workers: Optional[int] = None, *,
@@ -142,7 +166,7 @@ class AggSpec:
             raise ValueError(
                 "validate() needs n_workers — set it on the spec or pass "
                 "it explicitly")
-        check_quorum(self.gar, n, self.f_declared,
+        check_quorum(self.effective_gar, n, self.f_declared,
                      distributed=distributed,
                      history_window=self.history_window)
 

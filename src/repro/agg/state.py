@@ -28,6 +28,10 @@ so it jits, shards, and donates like any other carry:
   base rule bitwise).  Training states carry ``(n,)``; the serving
   layer allocates per-slot ``(n, batch)`` columns via ``rep_dims`` so
   slot reuse can reset one request's column without touching the rest.
+* ``obs`` — the ``obs-<base>`` telemetry rules' fixed-size
+  ``MetricsBuffer`` forensics ring (``repro.obs.buffer``), one
+  ``AggDiagnostics`` row pushed per aggregation call and drained on
+  host between steps.  The ring never feeds back into the data path.
 
 Unused fields stay ``()`` (an empty pytree), so a rule only allocates
 the buffers its ``state_fields`` declare.
@@ -52,6 +56,7 @@ class AggState(NamedTuple):
     center:   momentum-carried center leaves, or ``()``.
     bus:      async runtime's ``GradientBus`` slots + versions, or ``()``.
     reputation: per-worker fp32 trust scores in [0, 1], or ``()``.
+    obs:      telemetry ``MetricsBuffer`` forensics ring, or ``()``.
     """
 
     step: jnp.ndarray
@@ -59,6 +64,7 @@ class AggState(NamedTuple):
     center: Any = ()
     bus: Any = ()
     reputation: Any = ()
+    obs: Any = ()
 
 
 def init_state(rule: AggregatorRule, template: Any,
@@ -95,7 +101,9 @@ def init_state(rule: AggregatorRule, template: Any,
       structure and dtypes (rules only read ``bus.versions``; the async
       step owns the slots); a rule declaring ``"reputation"`` gets a
       **ones** buffer (neutral trust — uniform reputation reproduces
-      the base rule bitwise).
+      the base rule bitwise); a rule declaring ``"obs"`` gets an empty
+      ``MetricsBuffer`` ring of ``rule.obs_capacity`` rows sized to the
+      template's worker axis.
     """
     leaves = jax.tree_util.tree_leaves(template)
     dense = (flat if flat is not None
@@ -104,6 +112,7 @@ def init_state(rule: AggregatorRule, template: Any,
     center: Any = ()
     bus: Any = ()
     reputation: Any = ()
+    obs: Any = ()
     if "history" in rule.state_fields:
         w = rule.history_window
         if not w or w < 1:
@@ -122,5 +131,12 @@ def init_state(rule: AggregatorRule, template: Any,
     if "reputation" in rule.state_fields:
         n = leaves[0].shape[0]
         reputation = jnp.ones((n,) + tuple(rep_dims), jnp.float32)
+    if "obs" in rule.state_fields:
+        from repro.obs.buffer import (DEFAULT_OBS_CAPACITY,
+                                      init_metrics_buffer)
+        obs = init_metrics_buffer(
+            rule.obs_capacity or DEFAULT_OBS_CAPACITY,
+            leaves[0].shape[0])
     return AggState(step=jnp.zeros((), jnp.int32), history=history,
-                    center=center, bus=bus, reputation=reputation)
+                    center=center, bus=bus, reputation=reputation,
+                    obs=obs)

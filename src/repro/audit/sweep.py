@@ -174,7 +174,8 @@ def audit_roster() -> List[str]:
       Sorted rule names: all statically registered rules plus one or
       more representatives of each composite family (``bulyan-*``,
       ``buffered-*``, ``stale-*``, ``stale-exp-*``, ``fused-*``,
-      ``reputation-*`` and their nestings) — every name resolves through
+      ``reputation-*``, ``obs-*`` and their nestings) — every name
+      resolves through
       ``repro.agg.resolve_rule``.  The speculative serving section
       audits the roster's serving-capable subset (stateless rules with
       a tree path — what ``aggregate_logits`` can drive) as robust
@@ -199,6 +200,8 @@ def audit_roster() -> List[str]:
     roster += ["reputation-bulyan-krum", "reputation-buffered-cwmed",
                "reputation-stale-krum", "stale-reputation-krum",
                "reputation-fused-krum"]
+    roster += ["obs-krum", "obs-cwmed", "obs-bulyan-krum",
+               "obs-stale-krum", "obs-reputation-krum"]
     return sorted(roster)
 
 

@@ -54,7 +54,9 @@ import numpy as np
 from repro.agg.specs import AggSpec
 from repro.agg.state import AggState, init_state
 from repro.dist.robust import distributed_aggregate, inject_byzantine
-from repro.dist.train import _global_norm, make_loss_fn
+from repro.dist.train import make_loss_fn
+from repro.obs.schema import (async_extras, core_metrics, global_norm,
+                              selection_weight)
 from repro.optim import Optimizer
 
 __all__ = ["GradientBus", "delivery_mask", "init_async_state", "init_bus",
@@ -349,7 +351,8 @@ def make_async_train_step(cfg, spec: AggSpec, optimizer: Optimizer,
         state_in = agg_state._replace(bus=bus)
 
         out = distributed_aggregate(
-            bus.grads, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            bus.grads, spec.f_declared, spec.effective_gar,
+            agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
             state=state_in if stateful else None,
             history_window=spec.history_window,
@@ -395,20 +398,15 @@ def make_async_train_step(cfg, spec: AggSpec, optimizer: Optimizer,
         dev = jax.tree_util.tree_map(
             lambda a, m: a.astype(jnp.float32) - m, agg, honest_mean)
         staleness = t - bus.versions
-        metrics = {
-            "loss": jnp.mean(losses[:n_h]),
-            "grad_norm": _global_norm(agg),
-            "agg_dev": _global_norm(dev),
-            "byz_weight": (jnp.sum(res.selected[n_h:]) if f > 0
-                           else jnp.zeros((), jnp.float32)),
-            "staleness_mean": jnp.mean(staleness.astype(jnp.float32)),
-            "staleness_max": jnp.max(staleness).astype(jnp.float32),
-            "staleness_excess": jnp.max(
-                staleness_excess(bus, t, tau)).astype(jnp.float32),
-            "delivered": jnp.sum(deliver).astype(jnp.float32),
-        }
-        if reputed:
-            metrics["step_scale"] = step_scale
+        metrics = core_metrics(
+            loss=jnp.mean(losses[:n_h]),
+            grad_norm=global_norm(agg),
+            agg_dev=global_norm(dev),
+            byz_weight=selection_weight(res.selected, n_h),
+            step_scale=step_scale if reputed else None)
+        metrics.update(async_extras(staleness,
+                                    staleness_excess(bus, t, tau),
+                                    deliver))
         return new_params, new_opt, metrics, new_state
 
     return step

@@ -72,6 +72,7 @@ from jax.sharding import PartitionSpec as P
 from repro.kernels.pairwise_gram import (finalize_dists,
                                          pairwise_gram_partial,
                                          pairwise_gram_tree)
+from repro.obs.trace import named_span
 
 __all__ = ["DistAggResult", "coordinate_phase_nd", "distributed_aggregate",
            "inject_byzantine", "pairwise_sq_dists_tree",
@@ -242,23 +243,25 @@ def pairwise_sq_dists_tree(tree: Any, compute_dtype=jnp.float32, *,
     # the "fused" knob reroutes the *rule* (see distributed_aggregate);
     # its distance matrix, when a rule still asks for one, is the same
     # tiled Pallas accumulation
-    if backend in ("pallas", "fused"):
-        from repro.dist.mesh import mesh_axis_sizes
-        if mesh is not None and mesh_axis_sizes(mesh).get("model", 1) > 1:
-            d2 = _pallas_sharded_dists(tree, mesh, block_d=block_d,
-                                       interpret=interpret)
-        else:
-            d2 = pairwise_gram_tree(tree, block_d=block_d,
-                                    interpret=interpret)
-        return d2.astype(compute_dtype)
-    gram = jnp.zeros((n, n), compute_dtype)
-    sq = jnp.zeros((n,), compute_dtype)
-    for leaf in _leaves(tree):
-        x = leaf.astype(compute_dtype)
-        axes = _trailing_axes(leaf)
-        gram = gram + jnp.tensordot(x, x, axes=(axes, axes))
-        sq = sq + jnp.sum(x * x, axis=axes)
-    return finalize_dists(sq[:, None] + sq[None, :] - 2.0 * gram)
+    with named_span("agg/gram"):
+        if backend in ("pallas", "fused"):
+            from repro.dist.mesh import mesh_axis_sizes
+            if mesh is not None and mesh_axis_sizes(mesh).get("model",
+                                                              1) > 1:
+                d2 = _pallas_sharded_dists(tree, mesh, block_d=block_d,
+                                           interpret=interpret)
+            else:
+                d2 = pairwise_gram_tree(tree, block_d=block_d,
+                                        interpret=interpret)
+            return d2.astype(compute_dtype)
+        gram = jnp.zeros((n, n), compute_dtype)
+        sq = jnp.zeros((n,), compute_dtype)
+        for leaf in _leaves(tree):
+            x = leaf.astype(compute_dtype)
+            axes = _trailing_axes(leaf)
+            gram = gram + jnp.tensordot(x, x, axes=(axes, axes))
+            sq = sq + jnp.sum(x * x, axis=axes)
+        return finalize_dists(sq[:, None] + sq[None, :] - 2.0 * gram)
 
 
 # ---------------------------------------------------------------------------
@@ -311,12 +314,13 @@ def coordinate_phase_nd(selected: jnp.ndarray, f: int,
             f"beta = theta - 2f must be >= 1 (theta={theta}, f={f})")
     trailing = selected.shape[1:]
     d = math.prod(trailing)
-    if window is None or window <= 0 or d <= window:
-        return _phase_nd(selected, f)
-    flat = selected.reshape(theta, d)
-    chunks = [_phase_nd(flat[:, s:s + window], f)
-              for s in range(0, d, window)]
-    return jnp.concatenate(chunks, axis=0).reshape(trailing)
+    with named_span("agg/coordinate"):
+        if window is None or window <= 0 or d <= window:
+            return _phase_nd(selected, f)
+        flat = selected.reshape(theta, d)
+        chunks = [_phase_nd(flat[:, s:s + window], f)
+                  for s in range(0, d, window)]
+        return jnp.concatenate(chunks, axis=0).reshape(trailing)
 
 
 # ---------------------------------------------------------------------------
@@ -407,9 +411,11 @@ def distributed_aggregate(tree: Any, f: int, gar: str = "bulyan-krum", *,
     if rule.stateful:
         if state is None:
             state = init_state(rule, tree, flat=False)
-        out, new_state = rule.tree_fn(ctx, state)
+        with named_span("agg/select"):
+            out, new_state = rule.tree_fn(ctx, state)
     else:
-        out = rule.tree_fn(ctx)
+        with named_span("agg/select"):
+            out = rule.tree_fn(ctx)
 
     agg_tree = jax.tree_util.tree_unflatten(
         treedef, [a.astype(dt) for a, dt in zip(out.leaves, out_dtypes)])

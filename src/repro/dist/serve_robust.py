@@ -48,6 +48,7 @@ from repro.agg.state import AggState, init_state
 from repro.dist.robust import distributed_aggregate, inject_byzantine
 from repro.models import decode_step, prefill, verify_step
 from repro.models.config import ModelConfig
+from repro.obs.trace import named_span
 
 __all__ = ["aggregate_logits", "init_ensemble_state",
            "make_robust_prefill_step", "make_robust_serve_step",
@@ -346,7 +347,8 @@ def make_robust_prefill_step(cfg: ModelConfig, spec: AggSpec,
                               impl=impl))(stacked_params)
         stack = logits[:, :, -1, :].astype(jnp.float32)
         out = aggregate_logits(
-            stack, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            stack, spec.f_declared, spec.effective_gar,
+            agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
             history_window=spec.history_window,
             rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
@@ -396,7 +398,8 @@ def make_robust_serve_step(cfg: ModelConfig, spec: AggSpec,
         stack = logits[:, :, 0, :].astype(jnp.float32)
         stack = _maybe_attack_logits(stack, spec, pos)
         out = aggregate_logits(
-            stack, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            stack, spec.f_declared, spec.effective_gar,
+            agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
             state=agg_state, history_window=spec.history_window,
             rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
@@ -452,12 +455,14 @@ def make_robust_verify_step(cfg: ModelConfig, spec: AggSpec,
     stateful = spec.rule().stateful
 
     def _agg_one(state, slice_nbv):
-        out = aggregate_logits(
-            slice_nbv, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
-            distance_backend=spec.distance_backend, mesh=mesh,
-            state=state if stateful else None,
-            history_window=spec.history_window,
-            rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
+        with named_span("serve/verify"):
+            out = aggregate_logits(
+                slice_nbv, spec.f_declared, spec.effective_gar,
+                agg_dtype=spec.agg_dtype,
+                distance_backend=spec.distance_backend, mesh=mesh,
+                state=state if stateful else None,
+                history_window=spec.history_window,
+                rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
         new_state = out[2] if stateful else state
         return new_state, (out[0], out[1])
 

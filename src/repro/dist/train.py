@@ -30,6 +30,7 @@ from repro.agg.state import init_state
 from repro.dist.robust import distributed_aggregate, inject_byzantine
 from repro.models import forward
 from repro.models.config import ModelConfig
+from repro.obs.schema import core_metrics, global_norm, selection_weight
 from repro.optim import Optimizer
 
 __all__ = ["DistByzantineSpec", "init_agg_state", "make_loss_fn",
@@ -81,12 +82,9 @@ def make_loss_fn(cfg: ModelConfig, impl: str = "auto") -> Callable:
     return loss_fn
 
 
-def _global_norm(tree) -> jnp.ndarray:
-    total = jnp.zeros((), jnp.float32)
-    for leaf in jax.tree_util.tree_leaves(tree):
-        x = leaf.astype(jnp.float32)
-        total = total + jnp.sum(x * x)
-    return jnp.sqrt(total)
+# per-leaf fp32 norm accumulation now lives in the shared metrics
+# schema; the historic private name stays for the async step's import
+_global_norm = global_norm
 
 
 def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
@@ -147,7 +145,8 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
                                      step=opt_state["step"], **akw)
 
         out = distributed_aggregate(
-            grads, spec.f_declared, spec.gar, agg_dtype=spec.agg_dtype,
+            grads, spec.f_declared, spec.effective_gar,
+            agg_dtype=spec.agg_dtype,
             distance_backend=spec.distance_backend, mesh=mesh,
             state=agg_state, history_window=spec.history_window,
             rep_lr=spec.rep_lr, rep_decay=spec.rep_decay)
@@ -189,15 +188,12 @@ def make_train_step(cfg: ModelConfig, spec: DistByzantineSpec,
             lambda g: jnp.mean(g[:n_h].astype(jnp.float32), axis=0), grads)
         dev = jax.tree_util.tree_map(
             lambda a, m: a.astype(jnp.float32) - m, agg, honest_mean)
-        metrics = {
-            "loss": jnp.mean(losses[:n_h]),
-            "grad_norm": _global_norm(agg),
-            "agg_dev": _global_norm(dev),
-            "byz_weight": (jnp.sum(res.selected[n_h:]) if f > 0
-                           else jnp.zeros((), jnp.float32)),
-        }
-        if reputed:
-            metrics["step_scale"] = step_scale
+        metrics = core_metrics(
+            loss=jnp.mean(losses[:n_h]),
+            grad_norm=global_norm(agg),
+            agg_dev=global_norm(dev),
+            byz_weight=selection_weight(res.selected, n_h),
+            step_scale=step_scale if reputed else None)
         return new_params, new_state, metrics, new_agg_state
 
     if stateful:

@@ -132,6 +132,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             logits_dtype: Optional[str] = None,
             serve_gar: Optional[str] = None, serve_f: int = 2,
             serve_replicas: int = 0, serve_speculative_k: int = 0,
+            telemetry: bool = False,
             out_path: Optional[str] = None) -> Dict[str, Any]:
     import jax
     import jax.numpy as jnp
@@ -187,6 +188,7 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         "multi_pod": multi_pod, "gar": gar, "attack": attack,
         "reduced": reduced, "impl": impl, "overrides": overrides,
         "agg_dtype": agg_dtype, "distance_backend": distance_backend,
+        "telemetry": telemetry,
     }
     n_chips = mesh.devices.size
     t0 = time.time()
@@ -206,7 +208,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                                      distance_backend=distance_backend,
                                      rep_lr=rep_lr,
                                      async_tau=async_tau,
-                                     async_schedule=async_schedule)
+                                     async_schedule=async_schedule,
+                                     telemetry=telemetry)
             record.update(async_tau=async_tau,
                           async_schedule=async_schedule)
             if rep_lr is not None:
@@ -225,7 +228,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             spec = DistByzantineSpec(f=3, gar=gar, attack=attack,
                                      agg_dtype=agg_dtype,
                                      distance_backend=distance_backend,
-                                     rep_lr=rep_lr)
+                                     rep_lr=rep_lr,
+                                     telemetry=telemetry)
             if rep_lr is not None:
                 record.update(rep_lr=rep_lr)
             step = make_train_step(cfg, spec, opt, impl=impl, mesh=mesh)
@@ -258,7 +262,8 @@ def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             sspec = DistByzantineSpec(f=serve_f, gar=serve_gar,
                                       agg_dtype=agg_dtype,
                                       distance_backend=distance_backend,
-                                      speculative_k=serve_speculative_k)
+                                      speculative_k=serve_speculative_k,
+                                      telemetry=telemetry)
             record.update(serve_gar=serve_gar, serve_f=serve_f,
                           serve_replicas=n_rep,
                           serve_speculative_k=serve_speculative_k)
@@ -417,6 +422,10 @@ def main() -> None:
                     help="unroll the layer scan: analysis-grade costs "
                          "(cost_analysis/HLO parsing see while bodies "
                          "once; rolled runs undercount per-step work)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="compile with aggregation forensics on (wraps "
+                         "the GAR in its obs-* composite; the carried "
+                         "AggState gains a fixed-size metrics ring)")
     ap.add_argument("--out", default=None, help="JSON artifact path")
     args = ap.parse_args()
     if args.legacy_sharding:
@@ -438,6 +447,7 @@ def main() -> None:
                   serve_gar=args.serve_gar, serve_f=args.serve_f,
                   serve_replicas=args.serve_replicas,
                   serve_speculative_k=args.serve_speculative_k,
+                  telemetry=args.telemetry,
                   out_path=args.out)
     print(json.dumps(rec, indent=1))
 

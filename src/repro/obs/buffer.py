@@ -1,0 +1,185 @@
+"""Jit-compatible metrics ring for aggregation forensics.
+
+The telemetry layer (``obs-<base>`` rules, see ``repro.obs.forensics``)
+records one :class:`AggDiagnostics` row per aggregation call into a
+fixed-size :class:`MetricsBuffer` ring that is carried through compiled
+steps exactly like ``AggState`` — it is a pytree of arrays, so it rides
+``jax.jit``, ``lax.scan`` carries, ``jax.eval_shape`` and checkpoint
+flatten/unflatten with no host callbacks.  The host drains it between
+steps (or at the end of a run) with :func:`drain`.
+
+Every field is fp32 (or int32 for the cursor) so the ring obeys the
+repo-wide fp32 aggregation contract and never perturbs the wrapped
+rule's numerics — the wrapper only *reads* the rule's outputs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "AggDiagnostics",
+    "DEFAULT_OBS_CAPACITY",
+    "MetricsBuffer",
+    "drain",
+    "init_metrics_buffer",
+    "push_record",
+]
+
+DEFAULT_OBS_CAPACITY = 64
+"""Ring rows allocated when an ``obs-<base>`` rule does not override
+``AggregatorRule.obs_capacity``.  64 rows x a handful of (n,) fp32
+vectors is a few KiB — negligible against the gradient stack."""
+
+
+class AggDiagnostics(NamedTuple):
+    """One structured forensics row emitted per aggregation call.
+
+    All per-worker vectors are length ``n`` (the worker axis of the
+    stack that was aggregated) and fp32; scalars are fp32 ``()``.
+
+    Fields:
+      step: aggregation step counter at record time.
+      selected: per-worker selection mask/weight as reported by the
+        wrapped rule (``res.selected``), normalised to fp32.
+      scores: per-worker rule scores (Krum scores, trimmed-mean
+        weights, ...; ``res.scores``).
+      dist_to_agg: per-worker L2 distance from each submitted gradient
+        to the emitted aggregate — the suspicion primitive.
+      trimmed_frac: fraction of coordinates where the worker falls
+        outside the per-coordinate ``f``-trimmed range (coordinate-wise
+        outlier mass).
+      reputation: per-worker reputation snapshot after the call (ones
+        when the wrapped rule carries no reputation state).
+      staleness: per-worker staleness ``step - version`` read from the
+        gradient bus (zeros on synchronous paths).
+      agg_dev: L2 distance between the aggregate and the plain mean of
+        the stack — the empirical poisoning-leeway proxy's numerator.
+      spread: mean of ``dist_to_agg`` — the proxy's denominator.
+    """
+
+    step: jnp.ndarray
+    selected: jnp.ndarray
+    scores: jnp.ndarray
+    dist_to_agg: jnp.ndarray
+    trimmed_frac: jnp.ndarray
+    reputation: jnp.ndarray
+    staleness: jnp.ndarray
+    agg_dev: jnp.ndarray
+    spread: jnp.ndarray
+
+
+class MetricsBuffer(NamedTuple):
+    """Fixed-size in-graph ring of :class:`AggDiagnostics` rows.
+
+    Fields:
+      cursor: int32 ``()`` — total records pushed since init (not
+        wrapped; ``cursor % capacity`` is the next write slot, so the
+        host can tell how many rows are valid and whether any were
+        overwritten).
+      records: an :class:`AggDiagnostics` whose every leaf carries a
+        leading ``(capacity,)`` axis — the ring storage.
+      sel_total: fp32 ``(n,)`` — cumulative per-worker selection weight
+        over *all* pushes, not just the ones still in the ring, so
+        selection frequency survives ring wraparound.
+    """
+
+    cursor: jnp.ndarray
+    records: AggDiagnostics
+    sel_total: jnp.ndarray
+
+    @property
+    def capacity(self) -> int:
+        """Ring size (static — the leading axis of every record leaf)."""
+        return int(self.records.step.shape[0])
+
+
+def init_metrics_buffer(capacity: int, n: int) -> MetricsBuffer:
+    """Allocate an empty ring for ``n``-worker diagnostics.
+
+    Args:
+      capacity: number of ring rows (static; see
+        ``DEFAULT_OBS_CAPACITY``).
+      n: worker-axis length of the stacks this buffer will observe.
+
+    Returns:
+      A zero-initialised :class:`MetricsBuffer` with ``cursor == 0``.
+    """
+    vec = jnp.zeros((capacity, n), jnp.float32)
+    scalar = jnp.zeros((capacity,), jnp.float32)
+    records = AggDiagnostics(
+        step=scalar, selected=vec, scores=vec, dist_to_agg=vec,
+        trimmed_frac=vec, reputation=vec, staleness=vec,
+        agg_dev=scalar, spread=scalar)
+    return MetricsBuffer(cursor=jnp.zeros((), jnp.int32), records=records,
+                         sel_total=jnp.zeros((n,), jnp.float32))
+
+
+def push_record(buf: MetricsBuffer, rec: AggDiagnostics) -> MetricsBuffer:
+    """Append one diagnostics row, overwriting the oldest on overflow.
+
+    Pure and jit-safe: the write lands at ``cursor % capacity`` via
+    ``.at[idx].set`` and the cursor advances by one.
+
+    Args:
+      buf: ring to append to.
+      rec: row to write; every leaf must match the per-row shape of
+        ``buf.records`` (fp32 ``(n,)`` vectors / ``()`` scalars).
+
+    Returns:
+      The updated :class:`MetricsBuffer`.
+    """
+    cap = buf.capacity
+    idx = buf.cursor % cap
+    records = jax.tree_util.tree_map(
+        lambda store, row: store.at[idx].set(row.astype(store.dtype)),
+        buf.records, rec)
+    return MetricsBuffer(cursor=buf.cursor + 1, records=records,
+                         sel_total=buf.sel_total
+                         + rec.selected.astype(jnp.float32))
+
+
+def drain(buf: Any) -> Dict[str, Any]:
+    """Read a :class:`MetricsBuffer` out to host numpy, oldest-first.
+
+    Host-side only — call it between steps on a concrete buffer, never
+    inside a compiled function.
+
+    Args:
+      buf: a :class:`MetricsBuffer` (device or host), or the empty
+        pytree ``()`` that an un-instrumented ``AggState.obs`` carries.
+
+    Returns:
+      A dict with ``"pushed"`` (total rows ever written), ``"records"``
+      (list of per-row dicts in chronological order, at most
+      ``capacity`` long), and ``"selection_frequency"`` (``(n,)`` numpy
+      array of per-worker selection shares over the whole run; empty
+      array when nothing was recorded).  For ``buf=()`` all fields are
+      empty/zero.
+    """
+    if buf is None or (isinstance(buf, tuple) and not
+                       isinstance(buf, MetricsBuffer) and len(buf) == 0):
+        return {"pushed": 0, "records": [],
+                "selection_frequency": np.zeros((0,), np.float32)}
+    cursor = int(np.asarray(buf.cursor))
+    cap = int(np.asarray(buf.records.step).shape[0])
+    valid = min(cursor, cap)
+    records = jax.tree_util.tree_map(np.asarray, buf.records)
+    # chronological order: on wraparound the oldest row sits at
+    # cursor % cap, otherwise rows 0..valid-1 are already ordered
+    if cursor > cap:
+        order = (np.arange(cap) + cursor % cap) % cap
+    else:
+        order = np.arange(valid)
+    rows = []
+    for i in order[:valid]:
+        rows.append({f: np.asarray(getattr(records, f)[i])
+                     for f in AggDiagnostics._fields})
+    sel_total = np.asarray(buf.sel_total, np.float32)
+    total = float(sel_total.sum())
+    freq = sel_total / total if total > 0 else np.zeros_like(sel_total)
+    return {"pushed": cursor, "records": rows,
+            "selection_frequency": freq}

@@ -1,0 +1,289 @@
+"""Aggregation forensics: the ``obs-<base>`` telemetry rule family.
+
+The paper's whole argument is about what robust aggregation *silently
+does* — which workers Krum selects, how far the aggregate drifts inside
+the ε-poisoning leeway — and every one of those quantities is already
+computed (or one reduction away) inside the rule application.
+``obs-<base>`` wraps **any** registered rule through the unchanged
+registry (``resolve_rule("obs-krum")``, nesting outside ``stale-`` /
+``buffered-`` / ``reputation-`` / ``fused-`` / ``bulyan-`` composites)
+and records one :class:`~repro.obs.buffer.AggDiagnostics` row per call
+into the :class:`~repro.obs.buffer.MetricsBuffer` ring carried in
+``AggState.obs``.
+
+The contract that makes telemetry free to enable: the wrapper **never
+touches the data path**.  The base rule runs on the untouched stack and
+its result is returned bitwise-unchanged; the wrapper only *reads* the
+stack and the result to assemble the record.  Quorum (``min_n``),
+resilience and declared invariants are the base's own.
+
+The per-coordinate reductions (distance-to-aggregate, trimmed-range
+fraction) run on a **fixed-size coordinate sketch** — at most
+:data:`OBS_SKETCH` deterministically-placed coordinates of the stack,
+with norms scaled by ``sqrt(d / S)`` back to full-space magnitude — so
+the telemetry cost is bounded by the committee size, not the model
+size.  Order statistics on the sketch use a rank-count formulation
+(one broadcast compare over the ``(n, n, S)`` cube) instead of a sort:
+XLA's variadic sort on a thin worker axis costs more than the entire
+instrumented train step on CPU.
+
+Diagnostics derived on the host from the drained ring live in
+``repro.obs.detect``; see docs/observability.md for the full catalog.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.agg.registry import AggregatorRule, TreeContext
+from repro.obs.buffer import (DEFAULT_OBS_CAPACITY, AggDiagnostics,
+                              push_record)
+
+__all__ = ["OBS_SKETCH", "dense_diagnostics", "make_obs", "obs_name",
+           "tree_diagnostics"]
+
+#: max coordinates the forensic reductions touch per record; the dense
+#: path samples this many across evenly spaced contiguous blocks, the
+#: tree path apportions it over the leaves
+OBS_SKETCH = 512
+
+#: evenly spaced contiguous blocks the dense sketch is drawn from
+_SKETCH_BLOCKS = 16
+
+
+def obs_name(gar: str) -> str:
+    """The instrumented name of a GAR (idempotent).
+
+    Args:
+      gar: any name ``resolve_rule`` accepts.
+
+    Returns:
+      ``"obs-<gar>"``, or ``gar`` unchanged when already instrumented.
+    """
+    return gar if gar.startswith("obs-") else "obs-" + gar
+
+
+def _worker_snapshots(state, base: AggregatorRule,
+                      n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(reputation, staleness) ``(n,)`` fp32 snapshots from the state.
+
+    Branches on the base's *static* ``state_fields`` so the wrapper adds
+    no pytree-dependent control flow.  The serving reputation layout
+    ``(n, batch)`` is averaged over its trailing axes.
+    """
+    if "reputation" in base.state_fields:
+        rep = state.reputation.astype(jnp.float32)
+        if rep.ndim > 1:
+            rep = jnp.mean(rep, axis=tuple(range(1, rep.ndim)))
+    else:
+        rep = jnp.ones((n,), jnp.float32)
+    if "bus" in base.state_fields:
+        stale = jnp.maximum(
+            state.step - state.bus.versions, 0).astype(jnp.float32)
+    else:
+        stale = jnp.zeros((n,), jnp.float32)
+    return rep, stale
+
+
+def _sketch_dense(flat: jnp.ndarray) -> jnp.ndarray:
+    """Deterministic ``(n, S <= OBS_SKETCH)`` sketch of a flat stack.
+
+    Evenly spaced contiguous blocks: representative across the
+    coordinate space (layers, in a flattened param tree) while reading
+    only ``O(n * S)`` memory — a strided gather would touch the whole
+    array.
+    """
+    d = flat.shape[1]
+    if d <= OBS_SKETCH:
+        return flat
+    blk = OBS_SKETCH // _SKETCH_BLOCKS
+    starts = [round(i * (d - blk) / (_SKETCH_BLOCKS - 1))
+              for i in range(_SKETCH_BLOCKS)]
+    return jnp.concatenate([flat[:, s:s + blk] for s in starts], axis=1)
+
+
+def _trim_bounds(g: jnp.ndarray, f: int):
+    """Per-coordinate f-trimmed range of a ``(n, S)`` fp32 sketch.
+
+    Rank-count order statistics (ties broken by row index, matching a
+    stable sort): one broadcast compare over ``(n, n, S)`` — far cheaper
+    than XLA's thin-axis sort for the committee sizes in play.
+    """
+    n = g.shape[0]
+    f_eff = min(max(int(f), 0), (n - 1) // 2)
+    lt = g[None, :, :] < g[:, None, :]
+    tie = g[None, :, :] == g[:, None, :]
+    idx = jnp.arange(n)
+    rank = jnp.sum(
+        lt | (tie & (idx[None, :, None] < idx[:, None, None])), axis=1)
+    lo = jnp.sum(jnp.where(rank == f_eff, g, 0.0), axis=0)
+    hi = jnp.sum(jnp.where(rank == n - 1 - f_eff, g, 0.0), axis=0)
+    return lo, hi
+
+
+def dense_diagnostics(grads: jnp.ndarray, gradient: jnp.ndarray,
+                      selected: jnp.ndarray, scores: jnp.ndarray,
+                      f: int, step: jnp.ndarray,
+                      reputation: jnp.ndarray,
+                      staleness: jnp.ndarray) -> AggDiagnostics:
+    """Assemble one forensics row on the dense ``(n, d)`` path.
+
+    Pure fp32 reductions over a :data:`OBS_SKETCH`-bounded coordinate
+    sketch of the stack the rule consumed and the result it emitted —
+    nothing feeds back into the data path.  Norm-like fields
+    (``dist_to_agg``, ``agg_dev``, ``spread``) are scaled by
+    ``sqrt(d / S)`` to estimate their full-space magnitude.
+
+    Args:
+      grads: the ``(n, *dims)`` worker stack the rule saw.
+      gradient: the emitted aggregate, shape ``dims``.
+      selected: ``(n,)`` selection mask/weights from the result.
+      scores: ``(n,)`` per-worker rule scores from the result.
+      f: declared Byzantine bound (static; clamped to ``(n-1)//2`` for
+        the trimmed-range bound).
+      step: aggregation step counter to stamp on the record.
+      reputation: ``(n,)`` fp32 post-call reputation snapshot.
+      staleness: ``(n,)`` fp32 staleness snapshot.
+
+    Returns:
+      A fully-populated :class:`AggDiagnostics`.
+    """
+    n = grads.shape[0]
+    d = int(grads[0].size)
+    g = _sketch_dense(grads.reshape(n, -1)).astype(jnp.float32)
+    a = _sketch_dense(gradient.reshape(1, -1)).astype(jnp.float32)[0]
+    scale = float(d / g.shape[1]) ** 0.5
+    dist = jnp.sqrt(jnp.sum((g - a[None]) ** 2, axis=1)) * scale
+    lo, hi = _trim_bounds(g, f)
+    out_mask = (g < lo[None]) | (g > hi[None])
+    trimmed = jnp.mean(out_mask.astype(jnp.float32), axis=1)
+    agg_dev = jnp.linalg.norm(a - jnp.mean(g, axis=0)) * scale
+    return AggDiagnostics(
+        step=step.astype(jnp.float32),
+        selected=selected.astype(jnp.float32),
+        scores=scores.astype(jnp.float32),
+        dist_to_agg=dist, trimmed_frac=trimmed,
+        reputation=reputation, staleness=staleness,
+        agg_dev=agg_dev, spread=jnp.mean(dist))
+
+
+def tree_diagnostics(leaves: Sequence[jnp.ndarray],
+                     agg_leaves: Sequence[jnp.ndarray],
+                     selected: jnp.ndarray, scores: jnp.ndarray,
+                     f: int, step: jnp.ndarray,
+                     reputation: jnp.ndarray,
+                     staleness: jnp.ndarray) -> AggDiagnostics:
+    """Assemble one forensics row on the sharded tree path.
+
+    The :data:`OBS_SKETCH` coordinate budget is apportioned over the
+    leaves by size — each leaf contributes one centered contiguous
+    slice of its flattened coordinates, so no flat ``(n, d)`` matrix is
+    ever materialized (the sharded engine's invariant) and no leaf's
+    full memory is re-read.  Norm-like fields are scaled by
+    ``sqrt(d / S)`` back to full-space magnitude.
+
+    Args:
+      leaves: worker-stacked ``(n, *dims)`` leaves the rule saw.
+      agg_leaves: the emitted aggregate's leaves, shapes ``dims``.
+      selected: ``(n,)`` selection mask/weights from the result.
+      scores: ``(n,)`` per-worker rule scores from the result.
+      f: declared Byzantine bound (static).
+      step: aggregation step counter to stamp on the record.
+      reputation: ``(n,)`` fp32 post-call reputation snapshot.
+      staleness: ``(n,)`` fp32 staleness snapshot.
+
+    Returns:
+      A fully-populated :class:`AggDiagnostics`.
+    """
+    n = leaves[0].shape[0]
+    total = sum(int(leaf[0].size) for leaf in leaves)
+    d2 = jnp.zeros((n,), jnp.float32)
+    dev2 = jnp.zeros((), jnp.float32)
+    out_count = jnp.zeros((n,), jnp.float32)
+    coords = 0
+    for leaf, agg in zip(leaves, agg_leaves):
+        d_leaf = int(leaf[0].size)
+        s_leaf = max(1, min(d_leaf, round(OBS_SKETCH * d_leaf / total)))
+        start = (d_leaf - s_leaf) // 2
+        g = leaf.reshape(n, -1)[:, start:start + s_leaf]
+        g = g.astype(jnp.float32)
+        a = jnp.asarray(agg, jnp.float32).reshape(-1)[start:start + s_leaf]
+        d2 = d2 + jnp.sum((g - a[None]) ** 2, axis=1)
+        dev2 = dev2 + jnp.sum((a - jnp.mean(g, axis=0)) ** 2)
+        lo, hi = _trim_bounds(g, f)
+        out_mask = (g < lo[None]) | (g > hi[None])
+        out_count = out_count + jnp.sum(out_mask.astype(jnp.float32),
+                                        axis=1)
+        coords += s_leaf
+    scale = float(total / max(coords, 1)) ** 0.5
+    dist = jnp.sqrt(d2) * scale
+    return AggDiagnostics(
+        step=step.astype(jnp.float32),
+        selected=selected.astype(jnp.float32),
+        scores=scores.astype(jnp.float32),
+        dist_to_agg=dist,
+        trimmed_frac=out_count / max(coords, 1),
+        reputation=reputation, staleness=staleness,
+        agg_dev=jnp.sqrt(dev2) * scale, spread=jnp.mean(dist))
+
+
+def make_obs(name: str, base: AggregatorRule,
+             capacity: Optional[int] = None) -> AggregatorRule:
+    """Build the ``obs-<base>`` telemetry composite around any rule.
+
+    The composite is stateful with ``"obs"`` prepended to the base's
+    ``state_fields``; ``repro.agg.state.init_state`` allocates the
+    :class:`~repro.obs.buffer.MetricsBuffer` ring from the rule's
+    ``obs_capacity``.  The base runs on the untouched stack and its
+    result is passed through **bitwise-unchanged** — only the carried
+    ring differs from the uninstrumented rule.  Quorum, resilience and
+    invariants are inherited verbatim.
+
+    Args:
+      name: composite registry name (``"obs-<base>"``).
+      base: the resolved base rule; its tree implementation is wrapped
+        only when it has one.
+      capacity: ring rows to allocate (``None`` =
+        :data:`~repro.obs.buffer.DEFAULT_OBS_CAPACITY`).
+
+    Returns:
+      A stateful :class:`AggregatorRule` recording one diagnostics row
+      per application into ``AggState.obs``.
+    """
+    state_fields: Tuple[str, ...] = ("obs",) + tuple(
+        fld for fld in base.state_fields if fld != "obs")
+
+    def dense(grads, f, state):
+        if base.stateful:
+            res, state = base.dense_fn(grads, f, state)
+        else:
+            res = base.dense_fn(grads, f)
+            state = state._replace(step=state.step + 1)
+        rep, stale = _worker_snapshots(state, base, grads.shape[0])
+        rec = dense_diagnostics(grads, res.gradient, res.selected,
+                                res.scores, f, state.step, rep, stale)
+        return res, state._replace(obs=push_record(state.obs, rec))
+
+    tree_fn = None
+    if base.tree_fn is not None:
+        def tree_fn(ctx: TreeContext, state):
+            if base.stateful:
+                out, state = base.tree_fn(ctx, state)
+            else:
+                out = base.tree_fn(ctx)
+                state = state._replace(step=state.step + 1)
+            rep, stale = _worker_snapshots(state, base, ctx.n)
+            rec = tree_diagnostics(ctx.leaves, out.leaves, out.selected,
+                                   out.scores, ctx.f, state.step, rep,
+                                   stale)
+            return out, state._replace(obs=push_record(state.obs, rec))
+
+    return AggregatorRule(
+        name=name, min_n=base.min_n, dense_fn=dense, tree_fn=tree_fn,
+        byzantine_resilient=base.byzantine_resilient, stateful=True,
+        state_fields=state_fields, history_window=base.history_window,
+        invariants=base.invariants,
+        obs_capacity=capacity or DEFAULT_OBS_CAPACITY,
+        doc=f"forensics-recording wrapper around {base.name} "
+            f"(bitwise data path)")

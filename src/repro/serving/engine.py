@@ -93,6 +93,7 @@ class ServingEngine:
         self.sampler = sampler
         self.agg_state = None
         self.spec_k = 0
+        self.accept_counts: List[np.ndarray] = []
         if ensemble is None:
             self.params = params
             self.cache = init_cache(cfg, n_slots, cache_len)
@@ -280,6 +281,7 @@ class ServingEngine:
         emitted, count, _v = self._accept(block, agg_logits)
         emitted = np.asarray(emitted, np.int32)
         count = np.asarray(count, np.int32)
+        self.accept_counts.append(count.copy())
         for i, req in enumerate(self.active):
             if req is None:
                 continue
@@ -290,6 +292,26 @@ class ServingEngine:
             if len(req.generated) >= req.max_new_tokens:
                 req.done = True
                 self.active[i] = None
+
+    def telemetry(self) -> Dict:
+        """Drain the engine's aggregation forensics to host (numpy).
+
+        Returns the :func:`repro.obs.buffer.drain` report of the carried
+        ``AggState``'s metrics ring — empty when the ensemble spec does
+        not set ``telemetry=True`` — extended with the speculative
+        acceptance record: ``accept_counts`` is the ``(steps, n_slots)``
+        per-step accepted-prefix-length history and ``accept_mean`` its
+        scalar mean (0.0 before any speculative step ran).
+        """
+        from repro.obs.buffer import drain
+        obs = self.agg_state.obs if self.agg_state is not None else ()
+        report = drain(obs)
+        counts = (np.stack(self.accept_counts)
+                  if self.accept_counts else np.zeros((0, self.n_slots),
+                                                      np.int32))
+        report["accept_counts"] = counts
+        report["accept_mean"] = float(counts.mean()) if counts.size else 0.0
+        return report
 
     def run(self, requests: List[Request], max_steps: int = 1000
             ) -> Dict[int, List[int]]:

@@ -40,7 +40,9 @@ from repro.agg.reputation import (DEFAULT_REP_DECAY, DEFAULT_REP_LR,
 from repro.core import attacks as attacks_lib
 from repro.core import pytree as pt
 from repro.dist.async_train import (delivery_mask, init_bus, resolve_tau,
-                                    update_bus)
+                                    staleness_excess, update_bus)
+from repro.obs.buffer import drain
+from repro.obs.schema import async_extras, core_metrics, selection_weight
 from repro.optim import Optimizer
 
 #: deprecation alias — the single-host spec is now the unified
@@ -151,15 +153,12 @@ def make_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
         new_params, new_state = optimizer.update(agg, opt_state, params)
 
         honest_mean = jnp.mean(flat, axis=0)
-        metrics = {
-            "loss": loss_fn(params, x[0], y[0]),
-            "byz_weight": jnp.sum(res.selected[spec.n_honest:])
-            if n_eff > spec.n_honest else jnp.zeros(()),
-            "agg_dev": jnp.linalg.norm(res.gradient - honest_mean),
-            "grad_norm": jnp.linalg.norm(res.gradient),
-        }
-        if reputed:
-            metrics["step_scale"] = step_scale
+        metrics = core_metrics(
+            loss=loss_fn(params, x[0], y[0]),
+            byz_weight=selection_weight(res.selected, spec.n_honest),
+            agg_dev=jnp.linalg.norm(res.gradient - honest_mean),
+            grad_norm=jnp.linalg.norm(res.gradient),
+            step_scale=step_scale if reputed else None)
         return new_params, new_state, metrics, agg_state
 
     if rule.stateful:
@@ -214,10 +213,12 @@ class ByzantineTrainer:
             if self._stateful and use_attack != self._attack_mode:
                 self._attack_mode = use_attack
                 # per-worker buffers are row-count-dependent: the
-                # history window *and* the (n,) reputation column must
-                # restart when the committee changes size; the
-                # row-count-independent clipping center survives
-                if {"history", "reputation"} & set(self._rule.state_fields):
+                # history window, the (n,) reputation column *and* the
+                # (cap, n) forensics ring must restart when the
+                # committee changes size; the row-count-independent
+                # clipping center survives
+                if ({"history", "reputation", "obs"}
+                        & set(self._rule.state_fields)):
                     rows = (self.spec.n_workers if use_attack
                             else self.spec.n_honest)
                     self.agg_state = init_flat_agg_state(
@@ -235,6 +236,20 @@ class ByzantineTrainer:
                 rec["eval_acc"] = float(eval_fn(self.params))
             self.history.append(rec)
         return self.history
+
+    def telemetry(self):
+        """Drain the carried aggregation-forensics ring to host numpy.
+
+        Args:
+          (none) — reads ``self.agg_state.obs``.
+
+        Returns:
+          ``repro.obs.buffer.drain``'s dict (``pushed`` / ``records`` /
+          ``selection_frequency``); empty when the spec was built
+          without ``telemetry=True``.
+        """
+        obs = self.agg_state.obs if self.agg_state is not None else ()
+        return drain(obs)
 
 
 # ---------------------------------------------------------------------------
@@ -378,18 +393,15 @@ def make_async_byzantine_step(loss_fn: Callable, optimizer: Optimizer,
 
         honest_mean = jnp.mean(bus.grads[:n_h], axis=0)
         staleness = t - bus.versions
-        metrics = {
-            "loss": loss_fn(params, x[0], y[0]),
-            "byz_weight": jnp.sum(res.selected[n_h:])
-            if n_eff > n_h else jnp.zeros(()),
-            "agg_dev": jnp.linalg.norm(res.gradient - honest_mean),
-            "grad_norm": jnp.linalg.norm(res.gradient),
-            "staleness_mean": jnp.mean(staleness.astype(jnp.float32)),
-            "staleness_max": jnp.max(staleness).astype(jnp.float32),
-            "delivered": jnp.sum(deliver).astype(jnp.float32),
-        }
-        if reputed:
-            metrics["step_scale"] = step_scale
+        metrics = core_metrics(
+            loss=loss_fn(params, x[0], y[0]),
+            byz_weight=selection_weight(res.selected, n_h),
+            agg_dev=jnp.linalg.norm(res.gradient - honest_mean),
+            grad_norm=jnp.linalg.norm(res.gradient),
+            step_scale=step_scale if reputed else None)
+        metrics.update(async_extras(staleness,
+                                    staleness_excess(bus, t, tau),
+                                    deliver))
         return new_params, new_opt, metrics, new_state
 
     return step
@@ -448,3 +460,15 @@ class AsyncByzantineTrainer:
                 rec["eval_acc"] = float(eval_fn(self.params))
             self.history.append(rec)
         return self.history
+
+    def telemetry(self):
+        """Drain the carried aggregation-forensics ring to host numpy.
+
+        Args:
+          (none) — reads ``self.agg_state.obs``.
+
+        Returns:
+          ``repro.obs.buffer.drain``'s dict; empty when the spec was
+          built without ``telemetry=True``.
+        """
+        return drain(self.agg_state.obs)

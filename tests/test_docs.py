@@ -21,12 +21,14 @@ def test_front_door_exists():
     assert (REPO / "docs" / "audit.md").exists()
     assert (REPO / "docs" / "kernels.md").exists()
     assert (REPO / "docs" / "reputation.md").exists()
+    assert (REPO / "docs" / "observability.md").exists()
 
 
 @pytest.mark.parametrize("doc", ["README.md", "docs/dist-runtime.md",
                                  "docs/aggregation.md", "docs/serving.md",
                                  "docs/async-runtime.md", "docs/audit.md",
-                                 "docs/kernels.md", "docs/reputation.md"])
+                                 "docs/kernels.md", "docs/reputation.md",
+                                 "docs/observability.md"])
 def test_doc_lints_clean(doc):
     errors = docs_lint.lint_file(REPO / doc)
     assert not errors, "\n".join(errors)
@@ -61,7 +63,12 @@ def test_lint_catches_bad_snippet(tmp_path):
                                  "repro.kernels.probes",
                                  "repro.kernels.common",
                                  "repro.kernels.fused_agg",
-                                 "repro.agg.fused"])
+                                 "repro.agg.fused",
+                                 "repro.obs", "repro.obs.schema",
+                                 "repro.obs.buffer",
+                                 "repro.obs.forensics",
+                                 "repro.obs.detect", "repro.obs.trace",
+                                 "repro.obs.export"])
 def test_public_symbols_documented(pkg):
     """Acceptance criterion: every public symbol exported by repro.dist
     (and repro.kernels, and the serving stack) carries a docstring, and
@@ -139,6 +146,22 @@ def test_kernels_doc_covers_exported_api():
         names.update(importlib.import_module(pkg).__all__)
     missing = sorted(n for n in names if n not in text)
     assert not missing, f"docs/kernels.md misses exported API: {missing}"
+
+
+def test_obs_doc_covers_exported_api():
+    """docs/observability.md must not drift from the telemetry API
+    surface: every symbol exported by the repro.obs modules has to be
+    mentioned by name."""
+    import importlib
+    text = (REPO / "docs" / "observability.md").read_text()
+    names = set()
+    for pkg in ("repro.obs", "repro.obs.schema", "repro.obs.buffer",
+                "repro.obs.forensics", "repro.obs.detect",
+                "repro.obs.trace", "repro.obs.export"):
+        names.update(importlib.import_module(pkg).__all__)
+    missing = sorted(n for n in names if n not in text)
+    assert not missing, f"docs/observability.md misses exported API: " \
+                        f"{missing}"
 
 
 def test_changes_log_mentions_every_pr():
